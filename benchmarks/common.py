@@ -1,0 +1,17 @@
+"""Shared benchmark plumbing: CSV rows + timing."""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def timeit(fn, *args, repeat: int = 3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6

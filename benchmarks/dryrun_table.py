@@ -1,0 +1,55 @@
+"""Render EXPERIMENTS.md §Dry-run table from artifacts/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def rows():
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        tag = os.path.basename(path).replace(".json", "")
+        if tag.count("__") > 2:
+            continue
+        r = json.load(open(path))
+        if not r.get("ok"):
+            out.append((r, None))
+            continue
+        out.append((r, r["hlo"]))
+    return out
+
+
+def render(fh):
+    fh.write("| arch | shape | mesh | ok | compile (s) | HBM args+temp "
+             "(GiB/chip) | HLO GFLOPs/chip | coll GB/chip | cross-pod "
+             "GB/chip |\n")
+    fh.write("|---|---|---|---|---|---|---|---|---|\n")
+    for r, h in rows():
+        if h is None:
+            fh.write(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL "
+                     f"| | | | | |\n")
+            continue
+        mem = r["memory"]
+        args = mem.get("argument_size_in_bytes", 0) / 2 ** 30
+        temp = mem.get("temp_size_in_bytes", 0) / 2 ** 30
+        fh.write(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']:.0f} | {args:.2f}+{temp:.2f} | "
+            f"{h['flops'] / 1e9:,.0f} | "
+            f"{h['collective_total_bytes'] / 1e9:.2f} | "
+            f"{h['cross_pod_bytes'] / 1e9:.3f} |\n")
+
+
+def main():
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/dryrun_table.md", "w") as fh:
+        render(fh)
+    n = len(rows())
+    print(f"wrote artifacts/dryrun_table.md ({n} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Fig. 7: allreduce bandwidth, HFReduce vs NCCL, 16 -> 1440 GPUs
+(a), and HFReduce+NVLink (b).
+
+Reproduced with the physics-calibrated fabric model (benchmarks/netmodel)
+and cross-checked against the paper's reported ranges:
+  NCCL 1.6-4.8 GB/s, HFReduce 6.3-8.1 GB/s, HFReduce+NVLink >10 GB/s.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from benchmarks.netmodel import hfreduce_bw, nccl_ring_bw
+
+SIZES = [16, 32, 64, 128, 256, 512, 1024, 1440]
+
+
+def run():
+    rows = []
+    for n in SIZES:
+        (hf, nc), us = timeit(lambda: (hfreduce_bw(n), nccl_ring_bw(n)))
+        nv = hfreduce_bw(n, nvlink=True)
+        rows.append((n, hf, nc, nv))
+        emit(f"fig7.allreduce_bw.n{n}", us,
+             f"hfreduce={hf:.2f}GB/s nccl={nc:.2f}GB/s nvlink={nv:.2f}GB/s "
+             f"speedup={hf / nc:.2f}x")
+
+    hf_lo, hf_hi = rows[-1][1], rows[0][1]
+    nc_lo, nc_hi = rows[-1][2], rows[0][2]
+    nv_hi = rows[0][3]
+    ok = (5.8 <= hf_lo <= 7.0 and 7.5 <= hf_hi <= 8.7      # paper 6.3-8.1
+          and 1.2 <= nc_lo <= 2.2 and 4.0 <= nc_hi <= 5.5  # paper 1.6-4.8
+          and nv_hi >= 10.0)                               # paper >10
+    emit("fig7.hfreduce_range", 0, f"{hf_lo:.1f}-{hf_hi:.1f}(paper=6.3-8.1)")
+    emit("fig7.nccl_range", 0, f"{nc_lo:.1f}-{nc_hi:.1f}(paper=1.6-4.8)")
+    emit("fig7.nvlink_peak", 0, f"{nv_hi:.1f}(paper>10)")
+    emit("fig7.matches_paper", 0, str(ok))
+    return {"rows": rows, "ok": ok}
+
+
+if __name__ == "__main__":
+    run()

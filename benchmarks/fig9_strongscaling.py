@@ -1,0 +1,96 @@
+"""Paper Fig. 9: pipeline-parallel strong scaling — (a) LLaMa-13B (pp=4,
+seq 2048, global batch 4096), (b) DeepSeekMoE-16B (pp=10, seq 4096, gb 4608).
+
+Model: t(n) = (C/n)(1 + bubble(n)) + max(grad_comm(n) - overlap*C/n, 0)
+  C      = total compute GPU-seconds (<- per-GPU MFU, calibrated),
+  bubble = (pp-1)/(microbatches + pp-1) with microbatches = gb/dp,
+  comm   = DP gradient allreduce over the HFReduce fabric model.
+
+Calibration uses the two END points per curve (2 free params: MFU,
+overlap); interior points are PREDICTIONS checked against the paper —
+the 320-GPU DeepSeekMoE point (paper: 10.71 s) is the held-out test.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.netmodel import hfreduce_bw
+
+A100_FP16_MEASURED_TF = 220e12   # paper Table II (measured GEMM)
+
+
+def _model(n, C, overlap, flops_total, pp, gb, grad_gb):
+    dp = n // pp
+    micro = max(gb // dp, 1)
+    bubble = (pp - 1) / (micro + pp - 1)
+    t_c = C / n * (1 + bubble)
+    comm = grad_gb / hfreduce_bw(n, grad_gb)
+    return t_c + max(comm - overlap * C / n, 0.0)
+
+
+def _calibrate(n_lo, t_lo, n_hi, t_hi, flops_total, pp, gb, grad_gb):
+    """Fit (C, overlap) to the curve's end points."""
+    best = None
+    for C in np.linspace(flops_total / 300e12, flops_total / 30e12, 400):
+        for ov in np.linspace(0.0, 1.0, 101):
+            e = (abs(_model(n_lo, C, ov, flops_total, pp, gb, grad_gb) - t_lo)
+                 / t_lo +
+                 abs(_model(n_hi, C, ov, flops_total, pp, gb, grad_gb) - t_hi)
+                 / t_hi)
+            if best is None or e < best[0]:
+                best = (e, C, ov)
+    return best[1], best[2]
+
+
+def run():
+    ok = True
+
+    # ---- (a) LLaMa-13B ----
+    flops = 6 * 13e9 * (4096 * 2048)
+    grad_gb = 13e9 * 2 / 1e9
+    pp, gb = 4, 4096
+    paper_a = {64: 64.118, 512: 9.717}
+    C, ov = _calibrate(64, paper_a[64], 512, paper_a[512], flops, pp, gb,
+                       grad_gb)
+    mfu = flops / (C * A100_FP16_MEASURED_TF)
+    emit("fig9a.calibration", 0,
+         f"MFU={mfu:.2f}(of measured 220TF) overlap={ov:.2f}")
+    for n in (64, 128, 256, 512):
+        t = _model(n, C, ov, flops, pp, gb, grad_gb)
+        ref = paper_a.get(n)
+        emit(f"fig9a.llama13b.n{n}", 0,
+             f"t={t:.2f}s" + (f"(paper={ref}s)" if ref else "(prediction)"))
+        if ref:
+            ok &= abs(t - ref) / ref < 0.10
+    eff = paper_a[64] / (paper_a[512] * 8)
+    emit("fig9a.scaling_eff_64_512", 0,
+         f"{eff:.3f}(paper-quoted=0.91, from paper's own times=0.825)")
+
+    # ---- (b) DeepSeekMoE-16B (active ~2.8B params/token) ----
+    flops_b = 6 * 2.8e9 * (4608 * 4096)
+    grad_gb_b = 16.4e9 * 2 / 1e9          # full params sync (all experts)
+    pp_b, gb_b = 10, 4608
+    paper_b = {40: 79.615, 320: 10.71, 640: 6.535}
+    Cb, ovb = _calibrate(40, paper_b[40], 640, paper_b[640], flops_b, pp_b,
+                         gb_b, grad_gb_b)
+    mfu_b = flops_b / (Cb * A100_FP16_MEASURED_TF)
+    emit("fig9b.calibration", 0, f"MFU={mfu_b:.2f} overlap={ovb:.2f}")
+    for n in (40, 80, 160, 320, 640):
+        t = _model(n, Cb, ovb, flops_b, pp_b, gb_b, grad_gb_b)
+        ref = paper_b.get(n)
+        emit(f"fig9b.dsmoe16b.n{n}", 0,
+             f"t={t:.2f}s" + (f"(paper={ref}s)" if ref else "(prediction)"))
+        if ref:
+            tol = 0.20 if n == 320 else 0.10   # 320 is held out
+            ok &= abs(t - ref) / ref < tol
+    t320 = _model(320, Cb, ovb, flops_b, pp_b, gb_b, grad_gb_b)
+    emit("fig9b.heldout_320", 0,
+         f"pred={t320:.2f}s paper=10.71s err={abs(t320 - 10.71) / 10.71:.1%}")
+
+    emit("fig9.matches_paper", 0, str(ok))
+    return {"ok": ok}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure + the roofline.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig7 fig9  # subset
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import (fig7_allreduce, fig8_weakscaling, fig9_strongscaling,
+                        roofline, table2_costperf, table3_network,
+                        table6_failures)
+
+SUITES = {
+    "table2": table2_costperf.run,
+    "table3": table3_network.run,
+    "fig7": fig7_allreduce.run,
+    "fig8": fig8_weakscaling.run,
+    "fig9": fig9_strongscaling.run,
+    "table6": table6_failures.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for n in names:
+        try:
+            out = SUITES[n]()
+            if isinstance(out, dict) and out.get("ok") is False:
+                failures += 1
+        except Exception as e:  # keep the harness running
+            print(f"{n}.ERROR,0,{type(e).__name__}:{e}")
+            failures += 1
+    if failures:
+        print(f"run.failures,0,{failures}")
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Table II: PCIe-A100 node vs DGX-A100 — relative performance,
+price, cost-performance ratio, power.
+
+Derivation is from the hardware model (repro.hw); the GEMM row also runs a
+real (small) GEMM on this host to anchor 'us_per_call'.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.hw import DGX_A100_NODE, FIRE_FLYER_NODE
+
+PAPER = {
+    "tf32_rel": 107 / 131,
+    "fp16_rel": 220 / 263,
+    "rel_perf": 0.83,
+    "price_rel": 0.60,
+    "cost_perf": 1.38,
+    "power_rel": 2500 / 4200,
+}
+
+
+def run():
+    ours, dgx = FIRE_FLYER_NODE, DGX_A100_NODE
+
+    def gemm():
+        a = jnp.ones((512, 512), jnp.float32)
+        return (a @ a).block_until_ready()
+
+    _, us = timeit(gemm)
+
+    rel_tf32 = ours.tf32_tflops_per_gpu / dgx.tf32_tflops_per_gpu
+    rel_fp16 = ours.fp16_tflops_per_gpu / dgx.fp16_tflops_per_gpu
+    rel_perf = (rel_tf32 + rel_fp16) / 2
+    cost_perf = rel_perf / ours.node_relative_price
+    power_rel = ours.power_watts / dgx.power_watts
+
+    emit("table2.tf32_rel_perf", us, f"{rel_tf32:.3f}(paper~0.817)")
+    emit("table2.fp16_rel_perf", 0, f"{rel_fp16:.3f}(paper~0.837)")
+    emit("table2.rel_perf", 0, f"{rel_perf:.3f}(paper~0.83)")
+    emit("table2.node_price_rel", 0,
+         f"{ours.node_relative_price:.2f}(paper=0.60)")
+    emit("table2.cost_perf_ratio", 0, f"{cost_perf:.2f}(paper=1.38)")
+    emit("table2.power_rel", 0, f"{power_rel:.3f}(paper~0.60)")
+    ok = abs(cost_perf - PAPER["cost_perf"]) < 0.05
+    emit("table2.matches_paper", 0, str(ok))
+    return {"cost_perf": cost_perf, "rel_perf": rel_perf, "ok": ok}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Quickstart: build a model from the zoo, train a few steps, then serve.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ParallelConfig
+from repro.configs.registry import smoke_config
+from repro.data.synthetic import batch_for_model
+from repro.models import build_model
+from repro.optim import AdamW, warmup_cosine
+from repro import train_lib
+
+
+def main():
+    # 1. pick an assigned architecture (reduced config for CPU)
+    cfg = dataclasses.replace(smoke_config("phi4-mini-3.8b"),
+                              compute_dtype="float32")
+    model = build_model(cfg)
+    print(f"model: {cfg.name}  params={cfg.param_count():,}")
+
+    # 2. train a few steps
+    opt = AdamW(lr=warmup_cosine(3e-3, 2, 20), param_dtype="float32")
+    state = opt.init(model.init(jax.random.PRNGKey(0)))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pcfg = ParallelConfig(tp=1, fsdp=False, batch_axes=("data",))
+    step = jax.jit(train_lib.make_train_step(model, opt, pcfg, mesh),
+                   donate_argnums=(0,))
+    for i in range(10):
+        batch = {k: jnp.asarray(v) for k, v in
+                 batch_for_model(cfg, "train", i, 4, 64).items()}
+        state, metrics = step(state, batch)
+        print(f"  step {i}: loss={float(metrics['loss']):.4f}")
+
+    # 3. serve: prefill a prompt, decode a few tokens
+    params = state["params"]
+    pb = {k: jnp.asarray(v) for k, v in
+          batch_for_model(cfg, "prefill", 0, 2, 16).items()}
+    cache, logits = jax.jit(model.prefill)(params, pb)
+    cache = jax.tree_util.tree_map(
+        lambda x: jnp.pad(x, [(0, 0)] * 2 + [(0, 8)] + [(0, 0)] * 2)
+        if getattr(x, "ndim", 0) == 5 else x, cache)
+    toks = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [toks]
+    decode = jax.jit(model.decode_step)
+    for _ in range(7):
+        cache, logits = decode(params, cache, toks)
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(toks)
+    print("generated:", jnp.stack(out, 1).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""KV Context Caching on Disk (paper §VI-B4): repeated prompt prefixes skip
+prefill entirely — the prefilled decode state is restored from 3FS-KV.
+
+  PYTHONPATH=src python examples/serve_cached.py
+"""
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import smoke_config
+from repro.data.synthetic import batch_for_model
+from repro.fs3 import FS3Client, FS3Cluster, FS3KV
+from repro.models import build_model
+from repro.serve_lib import BatchServer, KVContextCache
+
+
+def main():
+    cfg = dataclasses.replace(smoke_config("phi4-mini-3.8b"),
+                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    with tempfile.TemporaryDirectory() as d:
+        cluster = FS3Cluster(d, n_nodes=2, targets_per_node=2, replication=2)
+        ctx = KVContextCache(FS3KV(FS3Client(cluster)))
+        server = BatchServer(model, params, ctx)
+
+        batch = {k: jnp.asarray(v) for k, v in
+                 batch_for_model(cfg, "prefill", 0, 4, 64).items()}
+        t0 = time.time()
+        out1, _ = server.serve(batch, gen=8)
+        t_cold = time.time() - t0
+        t0 = time.time()
+        out2, info = server.serve(batch, gen=8)
+        t_warm = time.time() - t0
+        assert (out1 == out2).all()
+        print(f"cold (prefill): {t_cold:.3f}s | warm (3FS-KV restore): "
+              f"{t_warm:.3f}s | hit rate {info['hit_rate']:.0%}")
+        print(f"speedup {t_cold / t_warm:.1f}x — the paper's 'context "
+              f"caching on disk' serving-cost lever")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Batched serving example: prefill a batch of prompts, decode greedily,
+measure per-step latency — on a sub-quadratic (hybrid) architecture whose
+decode state is O(1) in context length.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b
+  PYTHONPATH=src python examples/serve_lm.py --arch xlstm-125m --gen 32
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-1.2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--smoke",
+                "--batch", str(args.batch),
+                "--prompt-len", str(args.prompt_len),
+                "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: Fire-Flyer AI-HPC software/hardware co-design, reproduced as a
+multi-pod JAX training/inference framework for TPU."""
+
+__version__ = "0.1.0"

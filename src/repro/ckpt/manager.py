@@ -1,0 +1,206 @@
+"""Checkpoint manager (paper §VII-A).
+
+Faithful structure:
+  * state is pulled to host (the async GPU->CPU transfer), then a
+    background thread does the write — training never blocks on storage;
+  * tensors are packed into fixed-size *chunks*; every tensor records its
+    (chunk, offset, size) in the index — loads are chunk-parallel
+    batch reads ("3FS batch read API ... seconds");
+  * saves are atomic (index written last, then the `latest` pointer);
+  * periodic policy: ``maybe_save(step)`` every ``period_s`` (default 300 s
+    — the paper's 5 minutes), so a failure loses at most that window;
+  * backend: local directory (default) or a 3FS client.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+class _LocalBackend:
+    def __init__(self, root):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def write(self, name: str, data: bytes):
+        path = os.path.join(self.root, name)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        # unique tmp per writer: concurrent saves of the same step (async +
+        # final blocking) must not race on one tmp file
+        tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+
+    def read(self, name: str) -> bytes:
+        with open(os.path.join(self.root, name), "rb") as f:
+            return f.read()
+
+    def exists(self, name: str) -> bool:
+        return os.path.exists(os.path.join(self.root, name))
+
+    def delete_tree(self, prefix: str):
+        import shutil
+        p = os.path.join(self.root, prefix)
+        if os.path.isdir(p):
+            shutil.rmtree(p, ignore_errors=True)
+
+
+class _FS3Backend:
+    def __init__(self, client, prefix="/ckpt"):
+        self.client = client
+        self.prefix = prefix
+
+    def write(self, name: str, data: bytes):
+        self.client.write_file(f"{self.prefix}/{name}", data)
+
+    def read(self, name: str) -> bytes:
+        return self.client.read_file(f"{self.prefix}/{name}")
+
+    def exists(self, name: str) -> bool:
+        return self.client.exists(f"{self.prefix}/{name}")
+
+    def delete_tree(self, prefix: str):
+        pass  # fs3 GC not modeled
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+class CheckpointManager:
+    def __init__(self, root_or_backend, *, keep: int = 3,
+                 chunk_bytes: int = 16 * 1024 * 1024,
+                 period_s: float = 300.0):
+        if isinstance(root_or_backend, str):
+            self.backend = _LocalBackend(root_or_backend)
+        else:
+            self.backend = root_or_backend
+        self.keep = keep
+        self.chunk_bytes = chunk_bytes
+        self.period_s = period_s
+        self._pending: list[threading.Thread] = []
+        self._last_save_t = 0.0
+        self._lock = threading.Lock()
+
+    # ------------------------- save -------------------------
+
+    def save(self, state, step: int, blocking: bool = True):
+        """Snapshot to host, then write (async unless blocking)."""
+        host = jax.device_get(state)   # paper: async D2H before the write
+        if blocking:
+            self._write(host, step)
+            return
+        t = threading.Thread(target=self._write, args=(host, step),
+                             daemon=True)
+        t.start()
+        with self._lock:
+            self._pending.append(t)
+
+    def maybe_save(self, state, step: int, now: float | None = None) -> bool:
+        """Periodic policy (paper: every 5 minutes)."""
+        now = time.time() if now is None else now
+        if now - self._last_save_t >= self.period_s:
+            self._last_save_t = now
+            self.save(state, step, blocking=False)
+            return True
+        return False
+
+    def _write(self, host_state, step: int):
+        leaves = jax.tree_util.tree_flatten_with_path(host_state)[0]
+        index = {"step": step, "tensors": {}, "chunks": []}
+        buf, buf_used, chunk_id = [], 0, 0
+        writes = []
+
+        def flush():
+            nonlocal buf, buf_used, chunk_id
+            if not buf:
+                return
+            name = f"step_{step}/chunk_{chunk_id}.bin"
+            writes.append((name, b"".join(buf)))
+            index["chunks"].append(name)
+            buf, buf_used = [], 0
+            chunk_id += 1
+
+        for path, leaf in leaves:
+            arr = np.asarray(leaf)
+            raw = arr.tobytes()
+            if buf_used and buf_used + len(raw) > self.chunk_bytes:
+                flush()
+            index["tensors"][_path_str(path)] = {
+                "chunk": chunk_id, "offset": buf_used, "size": len(raw),
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+            }
+            buf.append(raw)
+            buf_used += len(raw)
+        flush()
+
+        for name, data in writes:          # 3FS batch write
+            self.backend.write(name, data)
+        self.backend.write(f"step_{step}/index.json",
+                           json.dumps(index).encode())
+        self.backend.write("latest.json",
+                           json.dumps({"step": step}).encode())
+        self._gc(step)
+
+    def _gc(self, latest_step: int):
+        if not isinstance(self.backend, _LocalBackend) or self.keep <= 0:
+            return
+        steps = []
+        for d in os.listdir(self.backend.root):
+            if d.startswith("step_"):
+                try:
+                    steps.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        for s in sorted(steps)[: -self.keep]:
+            self.backend.delete_tree(f"step_{s}")
+
+    def wait(self):
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for t in pending:
+            t.join()
+
+    # ------------------------- restore -------------------------
+
+    def latest_step(self):
+        if not self.backend.exists("latest.json"):
+            return None
+        return json.loads(self.backend.read("latest.json"))["step"]
+
+    def restore(self, step: int, template):
+        index = json.loads(self.backend.read(f"step_{step}/index.json"))
+        chunks = {i: self.backend.read(name)      # 3FS batch read
+                  for i, name in enumerate(index["chunks"])}
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for path, leaf in leaves:
+            rec = index["tensors"][_path_str(path)]
+            raw = chunks[rec["chunk"]][rec["offset"]:
+                                       rec["offset"] + rec["size"]]
+            dtype = np.dtype(leaf.dtype) if not rec["dtype"].startswith(
+                "bfloat16") else leaf.dtype
+            arr = np.frombuffer(raw, dtype=dtype).reshape(rec["shape"])
+            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), out)
+
+    def restore_latest(self, template):
+        step = self.latest_step()
+        if step is None:
+            return None
+        return self.restore(step, template), step

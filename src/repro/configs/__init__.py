@@ -1,0 +1,8 @@
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig,
+                                ShapeConfig, ParallelConfig, SHAPES,
+                                applicable_shapes)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "ParallelConfig",
+    "SHAPES", "applicable_shapes",
+]

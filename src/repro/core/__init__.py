@@ -1,0 +1,16 @@
+"""The paper's primary contribution, TPU-native:
+
+hfreduce        hierarchical (pod-aware) allreduce schedules
+tree_allreduce  double-binary-tree / ring collectives via ppermute
+bucketing       HaiScale-DDP gradient buckets (overlap units)
+ddp             explicit shard_map DDP runtime with HFReduce sync
+compression     bf16 / int8(+error-feedback) weak-link wire formats
+"""
+from repro.core.hfreduce import (crosspod_bytes_flat, crosspod_bytes_hier,
+                                 flat_allreduce, hfreduce, hfreduce_pytree,
+                                 hfreduce_tree)
+from repro.core.tree_allreduce import ring_allreduce, tree_allreduce
+
+__all__ = ["hfreduce", "hfreduce_tree", "hfreduce_pytree", "flat_allreduce",
+           "tree_allreduce", "ring_allreduce", "crosspod_bytes_flat",
+           "crosspod_bytes_hier"]

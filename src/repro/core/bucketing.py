@@ -1,0 +1,77 @@
+"""Gradient bucketing — the HaiScale DDP overlap unit (paper §V-A).
+
+HaiScale DDP launches allreduce asynchronously per gradient bucket as soon
+as backprop produces it, overlapping the weak-link transfer with remaining
+backward compute.  In XLA the async overlap itself is the latency-hiding
+scheduler's job; what we control is the *structure*: gradients are packed
+into fixed-byte buckets in reverse-layer order (ready-first), each bucket
+synced by its own collective, so the compiled HLO has many independent
+all-reduces that can interleave with compute instead of one monolithic
+end-of-step collective.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_BUCKET_BYTES = 25 * 1024 * 1024   # torch-DDP-style default
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    treedef: object
+    shapes: tuple
+    dtypes: tuple
+    sizes: tuple
+    bucket_slices: tuple     # list of (start, end) into the flat concat
+
+
+def plan_buckets(tree, bucket_bytes=DEFAULT_BUCKET_BYTES) -> BucketPlan:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(l.shape for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    sizes = tuple(int(np.prod(s)) for s in shapes)
+    # reverse order: last-produced grads (first layers... reverse of forward)
+    # are bucketed first so their sync can start earliest during backward.
+    slices = []
+    total = sum(sizes)
+    start = total
+    cur = 0
+    end = total
+    for sz, dt in zip(sizes[::-1], dtypes[::-1]):
+        b = sz * jnp.dtype(dt).itemsize
+        if cur + b > bucket_bytes and cur > 0:
+            slices.append((start, end))
+            end = start
+            cur = 0
+        start -= sz
+        cur += b
+    slices.append((start, end))
+    return BucketPlan(treedef, shapes, dtypes, sizes, tuple(slices))
+
+
+def flatten_tree(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+
+
+def unflatten_tree(plan: BucketPlan, flat: jax.Array):
+    out, off = [], 0
+    for shape, dtype, size in zip(plan.shapes, plan.dtypes, plan.sizes):
+        out.append(flat[off:off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(plan.treedef, out)
+
+
+def bucketed_apply(plan: BucketPlan, tree, fn):
+    """Apply ``fn`` (a collective) per bucket of the flattened tree."""
+    flat = flatten_tree(tree)
+    parts = [fn(flat[s:e]) for s, e in plan.bucket_slices]
+    # bucket_slices cover [0, total) in reverse contiguous order
+    ordered = sorted(zip(plan.bucket_slices, parts), key=lambda t: t[0][0])
+    flat = jnp.concatenate([p for _, p in ordered])
+    return unflatten_tree(plan, flat)

@@ -1,0 +1,5 @@
+from repro.data.synthetic import SyntheticLM, batch_for_model
+from repro.data.loader import PrefetchLoader, make_synthetic_loader
+
+__all__ = ["SyntheticLM", "batch_for_model", "PrefetchLoader",
+           "make_synthetic_loader"]

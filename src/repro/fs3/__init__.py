@@ -1,0 +1,4 @@
+from repro.fs3.client import FS3Client, FS3Cluster, DEFAULT_CHUNK
+from repro.fs3.kv import FS3KV, FS3Queue
+
+__all__ = ["FS3Client", "FS3Cluster", "FS3KV", "FS3Queue", "DEFAULT_CHUNK"]

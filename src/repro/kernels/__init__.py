@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each subpackage: kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd wrapper with backend dispatch), ref.py (pure-jnp
+oracle).  All validated on CPU with interpret=True (tests/test_kernels_*).
+"""
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.quant_comm import dequantize, quantize
+from repro.kernels.topk_gating import topk_gating
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["flash_attention", "rmsnorm", "quantize", "dequantize",
+           "topk_gating", "ssd_scan"]

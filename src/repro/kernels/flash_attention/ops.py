@@ -1,0 +1,21 @@
+"""Jitted wrapper: flash kernel on TPU, oracle elsewhere (or interpret)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, impl="auto", bq=128, bk=128):
+    """impl: 'auto' (kernel on TPU, ref otherwise) | 'kernel' | 'interpret'
+    | 'ref'."""
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal)
+    return flash_attention_fwd(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=(impl == "interpret"))

@@ -1,0 +1,4 @@
+from repro.kernels.quant_comm.ops import dequantize, quantize
+from repro.kernels.quant_comm.ref import dequantize_ref, quantize_ref
+
+__all__ = ["quantize", "dequantize", "quantize_ref", "dequantize_ref"]

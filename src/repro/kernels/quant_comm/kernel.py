@@ -1,0 +1,71 @@
+"""Blockwise int8 quantize/dequantize kernels (Pallas TPU).
+
+The compute analogue of HFReduce's CPU-side FP8-capable reduction (paper
+§IV-D1): the cross-pod allreduce payload is quantized to int8 with per-256-
+element absmax scales before hitting the weak link (core/compression.py is
+the jnp oracle + collective schedule; this kernel is the TPU hot loop).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QBLOCK = 256
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)              # (rows, QBLOCK)
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    scale = absmax / 127.0
+    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-12), 0.0)
+    q = jnp.clip(jnp.round(x * inv[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = (q * s_ref[...][:, None]).astype(o_ref.dtype)
+
+
+def quantize_fwd(x, *, block_rows=1024, interpret=False):
+    """x (n,) with n % QBLOCK == 0 -> (q int8 (n,), scales f32 (n/QBLOCK,))."""
+    n = x.shape[0]
+    assert n % QBLOCK == 0
+    rows = n // QBLOCK
+    br = min(block_rows, rows)
+    assert rows % br == 0
+    xr = x.reshape(rows, QBLOCK)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, QBLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, QBLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((br,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((rows, QBLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((rows,), jnp.float32)],
+        interpret=interpret,
+    )(xr)
+    return q.reshape(n), s
+
+
+def dequantize_fwd(q, s, *, out_dtype=jnp.float32, block_rows=1024,
+                   interpret=False):
+    n = q.shape[0]
+    rows = n // QBLOCK
+    br = min(block_rows, rows)
+    assert rows % br == 0
+    qr = q.reshape(rows, QBLOCK)
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, QBLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((br,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((br, QBLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, QBLOCK), out_dtype),
+        interpret=interpret,
+    )(qr, s)
+    return out.reshape(n)

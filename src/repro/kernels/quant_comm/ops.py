@@ -1,0 +1,27 @@
+"""Jitted wrappers for quant_comm."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.quant_comm.kernel import dequantize_fwd, quantize_fwd
+from repro.kernels.quant_comm.ref import dequantize_ref, quantize_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def quantize(x, *, impl="auto"):
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return quantize_ref(x)
+    return quantize_fwd(x, interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def dequantize(q, s, *, impl="auto"):
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return dequantize_ref(q, s)
+    return dequantize_fwd(q, s, interpret=(impl == "interpret"))

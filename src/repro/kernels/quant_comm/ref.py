@@ -1,0 +1,5 @@
+"""jnp oracle: reuse core/compression blockwise quantizer."""
+from repro.core.compression import (dequantize_blockwise as dequantize_ref,
+                                    quantize_blockwise as quantize_ref)
+
+__all__ = ["quantize_ref", "dequantize_ref"]

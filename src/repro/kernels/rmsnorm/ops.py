@@ -1,0 +1,21 @@
+"""Jitted wrapper for rmsnorm."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "eps"))
+def rmsnorm(x, w, *, eps=1e-6, impl="auto"):
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return rmsnorm_ref(x, w, eps)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    out = rmsnorm_fwd(x2, w, eps=eps, interpret=(impl == "interpret"))
+    return out.reshape(shape)

@@ -1,0 +1,10 @@
+"""jnp oracle for the rmsnorm kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) *
+            w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_quadratic_ref, ssd_ref
+
+__all__ = ["ssd_scan", "ssd_ref", "ssd_quadratic_ref"]

@@ -1,0 +1,89 @@
+"""Mamba-2 SSD chunk-scan kernel (Pallas TPU).
+
+The hardware-adaptation showcase (DESIGN.md §6): the selective-state
+recurrence is reformulated as chunked matmuls (MXU work) with the carried
+state held in VMEM scratch across the sequential chunk axis of the grid —
+HBM sees each chunk exactly once.
+
+Grid: (batch, n_chunks) with chunks innermost (sequential on TPU).
+Per-chunk working set at (c=256, h<=64, p=64, n<=128):
+  x (c,h,p) + decay L (h,c,c) fp32 ~ 16-20 MB — fits v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, h_sc, *,
+                nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_sc[...] = jnp.zeros_like(h_sc)
+
+    x = x_ref[0].astype(jnp.float32)                # (c, h, p)
+    a = a_ref[0].astype(jnp.float32)                # (c, h)
+    B = b_ref[0].astype(jnp.float32)                # (c, n)
+    C = c_ref[0].astype(jnp.float32)                # (c, n)
+    c_len = x.shape[0]
+
+    cum = jnp.cumsum(a, axis=0)                     # (c, h)
+    seg = cum[:, None, :] - cum[None, :, :]         # (l, s, h)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (c_len, c_len), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (c_len, c_len), 1)
+    L = jnp.where((ii >= jj)[:, :, None], jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("ls,lsh,shp->lhp", scores, L, x)
+    hprev = h_sc[...]                               # (h, p, n)
+    y_off = jnp.einsum("ln,hpn,lh->lhp", C, hprev, jnp.exp(cum))
+
+    decay_end = jnp.exp(cum[-1, :][None, :] - cum)  # (c, h)
+    h_new = jnp.einsum("sh,shp,sn->hpn", decay_end, x, B)
+    h_sc[...] = h_new + hprev * jnp.exp(cum[-1, :])[:, None, None]
+
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        hfin_ref[0] = h_sc[...]
+
+
+def ssd_scan_fwd(x, a, B, C, *, chunk=256, interpret=False):
+    """x (b,l,h,p); a (b,l,h) log-decay; B/C (b,l,n).
+
+    Returns (y (b,l,h,p), h_final (b,h,p,n))."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    c = min(chunk, l)
+    assert l % c == 0
+    nc = l // c
+    kernel = functools.partial(_ssd_kernel, nc=nc)
+    y, hfin = pl.pallas_call(
+        kernel,
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((1, c, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, c, h), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, c, n), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, c, n), lambda bi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda bi, ci: (bi, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, a, B, C)
+    return y, hfin

@@ -1,0 +1,19 @@
+"""Jitted wrapper for ssd_scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_scan(x, a, B, C, *, chunk=256, impl="auto"):
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return ssd_ref(x, a, B, C, chunk)
+    return ssd_scan_fwd(x, a, B, C, chunk=chunk,
+                        interpret=(impl == "interpret"))

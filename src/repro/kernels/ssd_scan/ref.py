@@ -1,0 +1,11 @@
+"""jnp oracles for the SSD scan kernel: the model's own chunked scan and
+the O(l^2) closed form."""
+from repro.models.ssm_common import ssd_chunked, ssd_reference
+
+
+def ssd_ref(x, a, B, C, chunk=256):
+    return ssd_chunked(x, a, B, C, min(chunk, x.shape[1]))
+
+
+def ssd_quadratic_ref(x, a, B, C):
+    return ssd_reference(x, a, B, C)

@@ -1,0 +1,4 @@
+from repro.kernels.topk_gating.ops import topk_gating
+from repro.kernels.topk_gating.ref import topk_gating_ref
+
+__all__ = ["topk_gating", "topk_gating_ref"]

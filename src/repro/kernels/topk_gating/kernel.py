@@ -1,0 +1,60 @@
+"""MoE router top-k gating kernel (Pallas TPU).
+
+Fuses softmax + iterative top-k (k unrolled max/mask rounds in VREGs) +
+renormalization over a (token_block, n_experts) tile — the EP dispatch
+front-end (HaiScale EP, paper §V-B).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _gating_kernel(logits_ref, w_ref, i_ref, *, k: int, renorm: bool):
+    x = logits_ref[...].astype(jnp.float32)         # (bt, E)
+    bt, E = x.shape
+    # softmax
+    m = jnp.max(x, axis=1, keepdims=True)
+    p = jnp.exp(x - m)
+    p = p / jnp.sum(p, axis=1, keepdims=True)
+    # iterative top-k
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bt, E), 1)
+    cur = p
+    wsum = jnp.zeros((bt,), jnp.float32)
+    ws, idxs = [], []
+    for j in range(k):
+        wj = jnp.max(cur, axis=1)
+        ij = jnp.argmax(cur, axis=1).astype(jnp.int32)
+        ws.append(wj)
+        idxs.append(ij)
+        wsum = wsum + wj
+        cur = jnp.where(iota == ij[:, None], NEG_INF, cur)
+    w = jnp.stack(ws, axis=1)                       # (bt, k)
+    if renorm:
+        w = w / jnp.maximum(wsum, 1e-9)[:, None]
+    w_ref[...] = w
+    i_ref[...] = jnp.stack(idxs, axis=1)
+
+
+def topk_gating_fwd(logits, k: int, *, renorm=True, block_tokens=512,
+                    interpret=False):
+    """logits (T, E) -> (weights (T, k) f32, experts (T, k) i32)."""
+    T, E = logits.shape
+    bt = min(block_tokens, T)
+    assert T % bt == 0
+    kernel = functools.partial(_gating_kernel, k=k, renorm=renorm)
+    return pl.pallas_call(
+        kernel,
+        grid=(T // bt,),
+        in_specs=[pl.BlockSpec((bt, E), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bt, k), lambda i: (i, 0)),
+                   pl.BlockSpec((bt, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((T, k), jnp.float32),
+                   jax.ShapeDtypeStruct((T, k), jnp.int32)],
+        interpret=interpret,
+    )(logits)

@@ -1,0 +1,19 @@
+"""Jitted wrapper for topk_gating."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.topk_gating.kernel import topk_gating_fwd
+from repro.kernels.topk_gating.ref import topk_gating_ref
+
+
+@functools.partial(jax.jit, static_argnames=("k", "renorm", "impl"))
+def topk_gating(logits, k: int, *, renorm=True, impl="auto"):
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return topk_gating_ref(logits, k, renorm)
+    return topk_gating_fwd(logits, k, renorm=renorm,
+                           interpret=(impl == "interpret"))

@@ -1,0 +1,11 @@
+"""jnp oracle for topk_gating."""
+import jax
+import jax.numpy as jnp
+
+
+def topk_gating_ref(logits, k: int, renorm=True):
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, i = jax.lax.top_k(p, k)
+    if renorm:
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, i.astype(jnp.int32)

@@ -1,0 +1,431 @@
+"""Trip-count-corrected HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE — with
+scan-over-layers models that under-reports FLOPs by ~n_layers x (verified:
+scan(8 matmuls) reports 1 matmul).  This module walks the compiled (SPMD,
+per-device) HLO text, computes per-computation costs, and multiplies loop
+bodies by their trip counts (from the while op's
+``backend_config={"known_trip_count":{"n":...}}``, falling back to the
+condition's constant bound):
+
+  flops            2*prod(out_dims)*prod(contracting_dims) per dot
+  bytes            operand+output bytes of top-level (post-fusion) ops
+  collective bytes operand bytes of all-reduce / all-gather / reduce-scatter
+                   / all-to-all / collective-permute, classified cross-pod
+                   vs intra-pod via replica_groups (device//chips_per_pod)
+
+All numbers are per chip (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_ARRAY_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2fnuz|f8e5m2|f8e4m3fnuz|f8e4m3|s64|"
+    r"s32|s16|s8|u64|u32|u16|u8|pred|c64|c128|s4|u4)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE_OP_RE = re.compile(r"^(.*?)\s([a-z][a-z0-9\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_COND_RE = re.compile(
+    r"(?:branch_computations=\{([^}]*)\}|"
+    r"true_computation=%?([\w.\-]+), false_computation=%?([\w.\-]+))")
+_GROUPS_RE = re.compile(
+    r"replica_groups=(\{\{.*?\}\}|\[[^\]]*\]<=\[[^\]]*\](?:T\([^)]*\))?)")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{(.*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+            "after-all", "iota", "bitcast-convert", "partition-id",
+            "replica-id", "opt-barrier", "domain"}
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(s):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def _shape_dims(s: str):
+    """Dims of the first array shape in s."""
+    m = _ARRAY_RE.search(s)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def _paren_segment(rhs: str) -> str:
+    if "(" not in rhs:
+        return ""
+    start = rhs.index("(")
+    depth = 0
+    for i in range(start, len(rhs)):
+        if rhs[i] == "(":
+            depth += 1
+        elif rhs[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return rhs[start:i + 1]
+    return rhs[start:]
+
+
+def _decode_groups(s: str):
+    if s.startswith("{{"):
+        return [[int(x) for x in g.replace(" ", "").split(",") if x]
+                for g in re.findall(r"\{([\d, ]+)\}", s)]
+    m = re.match(r"\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", s)
+    if not m:
+        return None
+    ng, gs = int(m.group(1)), int(m.group(2))
+    dims = [int(x) for x in m.group(3).split(",")]
+    ids = np.arange(int(np.prod(dims))).reshape(dims)
+    if m.group(4):
+        ids = ids.transpose([int(x) for x in m.group(4).split(",")])
+    flat = ids.reshape(-1)
+    return [flat[i * gs:(i + 1) * gs].tolist() for i in range(ng)]
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = field(default_factory=dict)
+    cross_pod: float = 0.0
+    intra_pod: float = 0.0
+    coll_ops: dict = field(default_factory=dict)
+    coll_detail: dict = field(default_factory=dict)  # (op,bytes,cross)->count
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.cross_pod += other.cross_pod * mult
+        self.intra_pod += other.intra_pod * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0) + v * mult
+        for k, v in other.coll_ops.items():
+            self.coll_ops[k] = self.coll_ops.get(k, 0) + v * mult
+        for k, v in other.coll_detail.items():
+            self.coll_detail[k] = self.coll_detail.get(k, 0) + v * mult
+
+
+def parse_computations(text: str):
+    """-> ({comp_name: [instr lines]}, entry_name, {instr_name: out_shape})."""
+    comps, symbols = {}, {}
+    cur, name, entry = None, None, None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if "->" in line and stripped.endswith("{") and ("(" in line):
+                head = stripped
+                is_entry = head.startswith("ENTRY")
+                if is_entry:
+                    head = head[len("ENTRY"):].strip()
+                m = re.match(r"%?([\w.\-]+)\s*\(", head)
+                if m:
+                    name = m.group(1)
+                    if is_entry:
+                        entry = name
+                    cur = []
+            continue
+        if stripped.startswith("}"):
+            comps[name] = cur
+            cur = None
+            continue
+        im = _INSTR_RE.match(stripped)
+        if im:
+            cur.append(stripped)
+            rhs = im.group(2)
+            som = _SHAPE_OP_RE.match(rhs)
+            if som:
+                symbols[im.group(1)] = som.group(1)
+    return comps, entry, symbols
+
+
+class HloAnalyzer:
+    def __init__(self, text: str, chips_per_pod: int = 256):
+        self.comps, self.entry, self.symbols = parse_computations(text)
+        self.chips_per_pod = chips_per_pod
+        self._memo: dict = {}
+        self.trip_fallbacks = 0
+
+    # ---------------- helpers ----------------
+
+    def _operand_names(self, rhs: str):
+        return _OPERAND_RE.findall(_paren_segment(rhs))
+
+    def _operand_bytes(self, rhs: str) -> int:
+        return sum(_shape_bytes(self.symbols.get(n, ""))
+                   for n in self._operand_names(rhs))
+
+    def _dot_flops(self, rhs: str, out_shape: str) -> float:
+        out_m = _ARRAY_RE.search(out_shape)
+        out_elems = 1
+        if out_m and out_m.group(2):
+            for d in out_m.group(2).split(","):
+                out_elems *= int(d)
+        ops = self._operand_names(rhs)
+        contract = 1
+        cm = _LHS_CONTRACT_RE.search(rhs)
+        if ops and cm and cm.group(1):
+            lhs_dims = _shape_dims(self.symbols.get(ops[0], ""))
+            for ci in cm.group(1).split(","):
+                ci = int(ci)
+                if ci < len(lhs_dims):
+                    contract *= lhs_dims[ci]
+        return 2.0 * out_elems * contract
+
+    def _trip_count(self, rhs: str, cond_name: str) -> int:
+        tm = _TRIP_RE.search(rhs)
+        if tm:
+            return int(tm.group(1))
+        consts = [int(m.group(1)) for line in self.comps.get(cond_name, [])
+                  for m in [_CONST_RE.search(line)] if m]
+        if consts:
+            return max(consts)
+        self.trip_fallbacks += 1
+        return 1
+
+    def _collective(self, op: str, rhs: str, cost: Cost):
+        base = op.replace("-start", "").replace("-done", "")
+        if op.endswith("-done"):
+            return
+        nbytes = self._operand_bytes(rhs)
+        # CPU-backend artifact: bf16 reductions are *promoted* to f32
+        # (convert -> all-reduce(f32, to_apply=%..._promoted) -> convert).
+        # On the TPU target they run at bf16 width — count them so.
+        if "promoted" in rhs and base in ("all-reduce", "reduce-scatter"):
+            nbytes //= 2
+        cost.coll_bytes[base] = cost.coll_bytes.get(base, 0) + nbytes
+        cost.coll_ops[base] = cost.coll_ops.get(base, 0) + 1
+        cross = None
+        gm = _GROUPS_RE.search(rhs)
+        if gm:
+            groups = _decode_groups(gm.group(1))
+            if groups is not None:
+                nontrivial = [g for g in groups if len(g) > 1]
+                cross = any(len({d // self.chips_per_pod for d in g}) > 1
+                            for g in nontrivial)
+        else:
+            sm = _SRC_TGT_RE.search(rhs)
+            if sm:
+                pairs = re.findall(r"\{(\d+),(\d+)\}", sm.group(1))
+                cross = any(
+                    int(a) // self.chips_per_pod != int(b) // self.chips_per_pod
+                    for a, b in pairs)
+        if cross:
+            cost.cross_pod += nbytes
+        elif cross is not None:
+            cost.intra_pod += nbytes
+        key = (base, nbytes, bool(cross) if cross is not None else None)
+        cost.coll_detail[key] = cost.coll_detail.get(key, 0) + 1
+
+    # ---------------- slice-aware byte accounting ----------------
+    #
+    # Naive operand+output accounting overcounts scan bodies massively: a
+    # dynamic-slice reading ONE layer of a (126, ...) stacked-param tensor
+    # would be billed the full stack, every iteration.  Rules:
+    #   dynamic-slice / gather:        2 * output bytes (read + write)
+    #   dynamic-update-slice/scatter:  3 * update-operand bytes (in-place)
+    #   copy:                          2 * output (often elided; upper bound)
+    #   fusion:  operands that are only consumed via dynamic-slice/gather
+    #            inside the fused computation count at their sliced size;
+    #            a fused ROOT dynamic-update-slice writes only its update.
+
+    def _fusion_param_reads(self, comp_name: str) -> dict:
+        """fusion-parameter index -> effective read bytes."""
+        if comp_name in getattr(self, "_fpr_memo", {}):
+            return self._fpr_memo[comp_name]
+        if not hasattr(self, "_fpr_memo"):
+            self._fpr_memo = {}
+        param_by_name: dict[str, tuple[int, int]] = {}
+        for line in self.comps.get(comp_name, []):
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            rhs = im.group(2)
+            som = _SHAPE_OP_RE.match(rhs)
+            if som and som.group(2) == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", rhs)
+                if pm:
+                    param_by_name[im.group(1)] = (
+                        int(pm.group(1)), _shape_bytes(som.group(1)))
+        reads = {idx: full for idx, full in param_by_name.values()}
+        sliced: dict[int, int] = {}
+        full_use: set[int] = set()
+        for line in self.comps.get(comp_name, []):
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            rhs = im.group(2)
+            som = _SHAPE_OP_RE.match(rhs)
+            if not som or som.group(2) == "parameter":
+                continue
+            op = som.group(2)
+            out_b = _shape_bytes(som.group(1))
+            is_root = line.lstrip().startswith("ROOT")
+            opnds = self._operand_names(rhs)
+            for pos, opn in enumerate(opnds):
+                if opn not in param_by_name:
+                    continue
+                idx, _full = param_by_name[opn]
+                if op in ("dynamic-slice", "gather"):
+                    sliced[idx] = sliced.get(idx, 0) + out_b
+                elif op == "dynamic-update-slice" and is_root and pos == 0:
+                    # in-place update of the base: no full read
+                    sliced.setdefault(idx, 0)
+                else:
+                    full_use.add(idx)
+        for idx, b in sliced.items():
+            if idx not in full_use:
+                reads[idx] = min(reads[idx], b)
+        self._fpr_memo[comp_name] = reads
+        return reads
+
+    def _fusion_out_bytes(self, comp_name: str, out_shape: str) -> int:
+        """Fused ROOT dynamic-update-slice writes only the update region."""
+        for line in self.comps.get(comp_name, []):
+            if not line.lstrip().startswith("ROOT"):
+                continue
+            im = _INSTR_RE.match(line)
+            som = _SHAPE_OP_RE.match(im.group(2)) if im else None
+            if som and som.group(2) == "dynamic-update-slice":
+                opnds = self._operand_names(im.group(2))
+                if len(opnds) >= 2:
+                    upd = _shape_bytes(self._local_shape(comp_name,
+                                                         opnds[1]))
+                    if upd:
+                        return 2 * upd
+        return _shape_bytes(out_shape)
+
+    def _local_shape(self, comp_name: str, instr: str) -> str:
+        return self.symbols.get(instr, "")
+
+    def _op_hbm_bytes(self, op: str, rhs: str, out_shape: str) -> float:
+        out_b = _shape_bytes(out_shape)
+        if op in ("dynamic-slice", "gather"):
+            return 2.0 * out_b
+        if op == "copy":
+            return 2.0 * out_b
+        if op in ("dynamic-update-slice", "scatter"):
+            opnds = self._operand_names(rhs)
+            upd = _shape_bytes(self.symbols.get(opnds[1], "")) \
+                if len(opnds) > 1 else out_b
+            return 3.0 * (upd or out_b)
+        if op == "fusion":
+            fm = _CALLS_RE.search(rhs)
+            opnds = self._operand_names(rhs)
+            total = 0.0
+            if fm:
+                reads = self._fusion_param_reads(fm.group(1))
+                for i, opn in enumerate(opnds):
+                    full = _shape_bytes(self.symbols.get(opn, ""))
+                    total += min(full, reads.get(i, full))
+                total += self._fusion_out_bytes(fm.group(1), out_shape)
+            else:
+                total = out_b + self._operand_bytes(rhs)
+            return total
+        return out_b + self._operand_bytes(rhs)
+
+    # ---------------- per-computation ----------------
+
+    def comp_cost(self, name: str, fused: bool = False) -> Cost:
+        key = (name, fused)
+        if key in self._memo:
+            return self._memo[key]
+        cost = Cost()
+        self._memo[key] = cost
+        for line in self.comps.get(name, []):
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            rhs = im.group(2)
+            som = _SHAPE_OP_RE.match(rhs)
+            if not som:
+                continue
+            out_shape, op = som.group(1), som.group(2)
+            if op in FREE_OPS:
+                continue
+            if op == "while":
+                wm = _WHILE_RE.search(rhs)
+                if wm:
+                    trips = self._trip_count(rhs, wm.group(1))
+                    cost.add(self.comp_cost(wm.group(2)), trips)
+                    cost.add(self.comp_cost(wm.group(1)), trips)
+                continue
+            if op == "conditional":
+                cm = _COND_RE.search(rhs)
+                if cm:
+                    if cm.group(1):
+                        branches = re.findall(r"%?([\w.\-]+)", cm.group(1))
+                    else:
+                        branches = [cm.group(2), cm.group(3)]
+                    subs = [self.comp_cost(b) for b in branches if b]
+                    if subs:
+                        cost.add(max(subs, key=lambda c: c.flops + c.bytes))
+                continue
+            if op in ("fusion", "call", "async-start"):
+                fm = _CALLS_RE.search(rhs) or _TO_APPLY_RE.search(rhs)
+                if fm:
+                    cost.add(self.comp_cost(fm.group(1),
+                                            fused=(op == "fusion")))
+                if not fused:
+                    cost.bytes += self._op_hbm_bytes(op, rhs, out_shape)
+                continue
+            if any(op.startswith(c) for c in COLLECTIVES):
+                self._collective(op, rhs, cost)
+                if not fused:
+                    cost.bytes += _shape_bytes(out_shape) + \
+                        self._operand_bytes(rhs)
+                continue
+            if op == "dot":
+                cost.flops += self._dot_flops(rhs, out_shape)
+            elif op == "convolution":
+                cost.flops += 2.0 * max(
+                    int(np.prod(_shape_dims(out_shape) or [0])), 0)
+            if not fused:
+                cost.bytes += self._op_hbm_bytes(op, rhs, out_shape)
+        self._memo[key] = cost
+        return cost
+
+    def entry_cost(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+
+def analyze_hlo(text: str, chips_per_pod: int = 256) -> dict:
+    an = HloAnalyzer(text, chips_per_pod)
+    c = an.entry_cost()
+    top = sorted(c.coll_detail.items(), key=lambda kv: -kv[0][1] * kv[1])[:12]
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collective_bytes": dict(c.coll_bytes),
+        "collective_total_bytes": float(sum(c.coll_bytes.values())),
+        "collective_ops": dict(c.coll_ops),
+        "cross_pod_bytes": c.cross_pod,
+        "intra_pod_bytes": c.intra_pod,
+        "top_collectives": [
+            {"op": k[0], "bytes": k[1], "cross_pod": k[2], "count": v}
+            for k, v in top],
+        "trip_count_fallbacks": an.trip_fallbacks,
+    }

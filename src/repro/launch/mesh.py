@@ -1,0 +1,23 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Small mesh for fake-device tests."""
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_shape_dict(mesh) -> dict:
+    return dict(mesh.shape)

@@ -1,0 +1,3 @@
+from repro.models.model_api import build_model, BaseLM, DecoderLM
+
+__all__ = ["build_model", "BaseLM", "DecoderLM"]

@@ -1,0 +1,206 @@
+"""GQA attention: projections, chunked (flash-style) softmax core, KV cache.
+
+The chunked jnp core is the memory-frugal XLA path used by train/prefill at
+long sequence lengths, and doubles as the oracle for the Pallas
+``flash_attention`` kernel.  Decode attends against a KV cache whose
+*sequence* dimension may be sharded over the "model" mesh axis
+(flash-decoding style — GSPMD inserts the partial-softmax combine).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import p
+from repro.models.common import apply_rope, rope_freqs
+from repro.parallel.axes import shard_act
+
+NEG_INF = -1e30
+
+
+# ----------------------------- params -------------------------------------
+
+
+def attn_defs(cfg):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": p((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": p((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": p((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": p((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = p((h, hd), ("heads", "head_dim"), init="zeros")
+        defs["bk"] = p((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+        defs["bv"] = p((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return defs
+
+
+def project_qkv(cfg, params, x, positions=None, rope: bool = True):
+    """x: (b, s, d) -> q (b,s,h,hd), k/v (b,s,kv,hd); RoPE applied."""
+    cd = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(cd)
+        k = k + params["bk"].astype(cd)
+        v = v + params["bv"].astype(cd)
+    if rope and cfg.rope_theta:
+        if positions is None:
+            positions = jnp.arange(x.shape[1])
+        cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = shard_act(q, "batch", "seq", "heads", "head_dim")
+    return q, k, v
+
+
+def out_proj(cfg, params, attn_out):
+    """attn_out (b, s, h, hd) -> (b, s, d)."""
+    y = jnp.einsum("bshk,hkd->bsd", attn_out,
+                   params["wo"].astype(attn_out.dtype))
+    return shard_act(y, "batch", "seq", "embed")
+
+
+# ------------------------- softmax attention cores -------------------------
+
+
+def _broadcast_kv(k, n_heads):
+    """(b, s, kv, hd) -> (b, s, h, hd) by group broadcast (GQA)."""
+    b, s, kv, hd = k.shape
+    if kv == n_heads:
+        return k
+    rep = n_heads // kv
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, rep, hd))
+    return k.reshape(b, s, n_heads, hd)
+
+
+def direct_attention(q, k, v, *, causal: bool, q_offset=0,
+                     mask: jax.Array | None = None):
+    """Full-materialization softmax attention. q (b,sq,h,hd), k/v (b,skv,h,hd).
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (decode)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        kpos = jnp.arange(skv)
+        cm = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(cm[None, None], logits, NEG_INF)
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", w, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk=1024, kv_chunk=1024,
+                      q_offset=0):
+    """Flash-style online-softmax attention in pure jnp (O(sq*chunk) memory).
+
+    q (b,sq,h,hd), k/v (b,skv,h,hd) — kv already GQA-broadcast.
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    scale = hd ** -0.5
+    nq = max(sq // q_chunk, 1)
+    nk = max(skv // kv_chunk, 1)
+    q_chunk = sq // nq
+    kv_chunk = skv // nk
+
+    qr = q.reshape(b, nq, q_chunk, h, hd)
+    kr = k.reshape(b, nk, kv_chunk, h, hd)
+    vr = v.reshape(b, nk, kv_chunk, h, hd)
+
+    def one_q_block(qi, qblk):
+        # qblk: (b, qc, h, hd)
+        # checkpoint the kv step: without it, scan stacks the exp'd score
+        # blocks ((nk, b, h, qc, kc) fp32) as backward saves — O(s^2/chunk)
+        # live memory; with it, backward recomputes them from (carry, kv
+        # chunk) — flash-attention-style (EXPERIMENTS.md §Perf).
+        @jax.checkpoint
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kblk, vblk = inp
+            s = jnp.einsum("bqhk,bshk->bhqs", qblk, kblk)
+            s = s.astype(jnp.float32) * scale
+            if causal:
+                qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                cm = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(cm[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pe = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(pe, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqs,bshk->bhqk", pe, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, hd), jnp.float32)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks, jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (b, qc, h, hd)
+
+    outs = [one_q_block(i, qr[:, i]) for i in range(nq)]
+    return jnp.concatenate(outs, axis=1) if nq > 1 else outs[0]
+
+
+def attention_core(cfg, q, k, v, *, causal=True, q_offset=0,
+                   chunked_threshold=2048):
+    """Dispatch: GQA-broadcast then direct or chunked core."""
+    k = _broadcast_kv(k, cfg.n_heads)
+    v = _broadcast_kv(v, cfg.n_heads)
+    skv = k.shape[1]
+    if skv <= chunked_threshold:
+        return direct_attention(q, k, v, causal=causal, q_offset=q_offset)
+    return chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                             q_chunk=min(q.shape[1], 1024),
+                             kv_chunk=min(skv, 1024))
+
+
+# ------------------------------- KV cache ----------------------------------
+
+
+def init_cache_defs(cfg, batch: int, max_len: int, layers: int,
+                    dtype="bfloat16"):
+    """ShapeDtypeStructs for a decode KV cache (used by input_specs)."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((layers, batch, max_len, kv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((layers, batch, max_len, kv, hd), dtype),
+        "index": jax.ShapeDtypeStruct((), "int32"),
+    }
+
+
+def cache_update(cache_k, cache_v, k_new, v_new, index):
+    """Insert (b, 1, kv, hd) at position ``index`` along the seq dim."""
+    ck = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
+                                      (0, index, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
+                                      (0, index, 0, 0))
+    return ck, cv
+
+
+def decode_attention(cfg, q, cache_k, cache_v, index):
+    """One-token attention against a (possibly seq-sharded) cache.
+
+    q: (b, 1, h, hd); cache_k/v: (b, S, kv, hd); positions < index+1 valid.
+    """
+    k = _broadcast_kv(cache_k, cfg.n_heads)
+    v = _broadcast_kv(cache_v, cfg.n_heads)
+    k = shard_act(k, "batch", "kv_seq", "heads", "head_dim")
+    v = shard_act(v, "batch", "kv_seq", "heads", "head_dim")
+    scale = cfg.head_dim ** -0.5
+    s = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
+    valid = jnp.arange(k.shape[1]) <= index
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", w, v)

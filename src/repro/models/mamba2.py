@@ -1,0 +1,132 @@
+"""Mamba-2 block (SSD formulation, arXiv:2405.21060) for zamba2-style hybrids."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_norm
+from repro.models.params import p
+from repro.models.ssm_common import (causal_conv1d, conv_state_update,
+                                     ssd_chunked, ssd_recurrent_step)
+from repro.parallel.axes import shard_act
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.state_size
+    return d_in, nheads, conv_dim
+
+
+def mamba2_defs(cfg):
+    s = cfg.ssm
+    d, (d_in, nheads, conv_dim) = cfg.d_model, _dims(cfg)
+    proj_out = 2 * d_in + 2 * s.state_size + nheads   # z, x, B, C, dt
+    return {
+        "in_proj": p((d, proj_out), ("embed", "ssm_inner")),
+        "conv_w": p((conv_dim, s.conv_width), ("ssm_inner", "conv"),
+                    init="small"),
+        "conv_b": p((conv_dim,), ("ssm_inner",), init="zeros"),
+        "dt_bias": p((nheads,), ("gates",), init="zeros"),
+        "A_log": p((nheads,), ("gates",), init="ones"),
+        "D": p((nheads,), ("gates",), init="ones"),
+        "norm_scale": p((d_in,), ("ssm_inner",), init="ones"),
+        "out_proj": p((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _project(cfg, params, u):
+    s = cfg.ssm
+    d_in, nheads, _ = _dims(cfg)
+    cd = u.dtype
+    zxbcdt = u @ params["in_proj"].astype(cd)
+    z, xBC, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in + 2 * s.state_size], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))         # (h,)
+    return z, xBC, dt, A
+
+
+def _gated_out(cfg, params, y, z):
+    """y, z (b, l, d_in) -> out (b, l, d)."""
+    cd = z.dtype
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(gf), axis=-1, keepdims=True)
+    g = (gf * jax.lax.rsqrt(ms + 1e-6) *
+         params["norm_scale"].astype(jnp.float32)).astype(cd)
+    return g @ params["out_proj"].astype(cd)
+
+
+def apply_mamba2(cfg, params, u):
+    """Train/prefill path. u (b, l, d) -> (b, l, d)."""
+    s = cfg.ssm
+    d_in, nheads, _ = _dims(cfg)
+    b, l, _ = u.shape
+    z, xBC, dt, A = _project(cfg, params, u)
+    xBC = jax.nn.silu(causal_conv1d(xBC, params["conv_w"].astype(xBC.dtype),
+                                    params["conv_b"].astype(xBC.dtype)))
+    x, B, C = jnp.split(xBC, [d_in, d_in + s.state_size], axis=-1)
+    xh = x.reshape(b, l, nheads, s.head_dim)
+    xh = shard_act(xh, "batch", "seq", "heads", "head_dim")
+    a = dt * A                                                # (b,l,h) log-decay
+    chunk = min(s.chunk_size, l)
+    y, _ = ssd_chunked((xh * dt[..., None].astype(xh.dtype)), a, B, C, chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, l, d_in)
+    return _gated_out(cfg, params, y, z)
+
+
+def mamba2_prefill(cfg, params, u):
+    """Like apply but also return the streaming state for decode."""
+    s = cfg.ssm
+    d_in, nheads, _ = _dims(cfg)
+    b, l, _ = u.shape
+    z, xBC, dt, A = _project(cfg, params, u)
+    conv_state = xBC[:, -(s.conv_width - 1):, :]
+    xBC = jax.nn.silu(causal_conv1d(xBC, params["conv_w"].astype(xBC.dtype),
+                                    params["conv_b"].astype(xBC.dtype)))
+    x, B, C = jnp.split(xBC, [d_in, d_in + s.state_size], axis=-1)
+    xh = x.reshape(b, l, nheads, s.head_dim)
+    a = dt * A
+    chunk = min(s.chunk_size, l)
+    y, hfin = ssd_chunked((xh * dt[..., None].astype(xh.dtype)), a, B, C,
+                          chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, l, d_in)
+    out = _gated_out(cfg, params, y, z)
+    return out, {"ssm": hfin, "conv": conv_state.astype(u.dtype)}
+
+
+def mamba2_decode(cfg, params, u, state):
+    """One-token decode. u (b, 1, d); state {ssm (b,h,p,n), conv (b,w-1,c)}."""
+    s = cfg.ssm
+    d_in, nheads, _ = _dims(cfg)
+    b = u.shape[0]
+    z, xBC, dt, A = _project(cfg, params, u)
+    xBC_out, conv_state = conv_state_update(
+        state["conv"], xBC, params["conv_w"].astype(xBC.dtype),
+        params["conv_b"].astype(xBC.dtype))
+    xBC_out = jax.nn.silu(xBC_out)
+    x, B, C = jnp.split(xBC_out, [d_in, d_in + s.state_size], axis=-1)
+    xh = x.reshape(b, nheads, s.head_dim)
+    a_t = (dt * A)[:, 0]                                      # (b,h)
+    x_t = xh * dt[:, 0, :, None].astype(xh.dtype)
+    hnew, y = ssd_recurrent_step(state["ssm"], x_t, a_t, B[:, 0], C[:, 0])
+    y = y + params["D"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(b, 1, d_in)
+    out = _gated_out(cfg, params, y, z)
+    return out, {"ssm": hnew, "conv": conv_state}
+
+
+def mamba2_state_specs(cfg, batch: int, dtype="bfloat16"):
+    s = cfg.ssm
+    d_in, nheads, conv_dim = _dims(cfg)
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, nheads, s.head_dim,
+                                     s.state_size), "float32"),
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_width - 1, conv_dim),
+                                     dtype),
+    }

@@ -1,0 +1,555 @@
+"""Uniform model API over the zoo.
+
+Every model exposes:
+  param_defs() / init(rng)
+  loss(params, batch) -> (scalar, metrics)
+  prefill(params, batch) -> (cache, logits_last)
+  decode_step(params, cache, tokens) -> (cache, logits)
+  batch_specs(shape) / cache_specs(shape) -> ShapeDtypeStruct trees
+
+``build_model(cfg)`` dispatches on ``cfg.family``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models import zamba as zamba_mod
+from repro.models.common import (apply_norm, cross_entropy, norm_defs,
+                                 sinusoidal_positions)
+from repro.models.params import init_tree, p, shape_tree
+from repro.models.transformer import (decode_layer, dense_layer, layer_defs,
+                                      prefill_layer, stack_defs, _sub)
+from repro.parallel.axes import shard_act
+
+WHISPER_DECODE_ENC_FRAMES = 1500
+
+
+def _embed_defs(cfg):
+    defs = {"embed": p((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                       init="embed", scale=0.02)}
+    if not cfg.tie_embeddings:
+        defs["unembed"] = p((cfg.d_model, cfg.vocab_size),
+                            ("embed", "vocab"))
+    defs.update({f"final_{k}": v for k, v in norm_defs(cfg).items()})
+    return defs
+
+
+class BaseLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.compute_dtype = cfg.compute_dtype
+
+    # -- shared pieces ------------------------------------------------------
+
+    def init(self, rng):
+        return init_tree(self.param_defs(), rng)
+
+    def param_shapes(self, dtype=None):
+        return shape_tree(self.param_defs(), dtype)
+
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        return x.astype(self.compute_dtype)
+
+    def _logits(self, params, x):
+        x = apply_norm(self.cfg, _sub(params, "final_"), x, name="norm")
+        if self.cfg.tie_embeddings:
+            w = params["embed"].T
+        else:
+            w = params["unembed"]
+        logits = x @ w.astype(x.dtype)
+        return shard_act(logits, "batch", "seq", "vocab")
+
+    def _ce(self, params, x, labels, mask=None):
+        logits = self._logits(params, x)
+        return cross_entropy(logits, labels, mask)
+
+    # -- API (must be overridden) ------------------------------------------
+
+    def param_defs(self):
+        raise NotImplementedError
+
+    def loss(self, params, batch):
+        raise NotImplementedError
+
+    def prefill(self, params, batch):
+        raise NotImplementedError
+
+    def decode_step(self, params, cache, tokens):
+        raise NotImplementedError
+
+    def batch_specs(self, shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), "int32"),
+                    "labels": jax.ShapeDtypeStruct((b, s), "int32")}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), "int32")}
+        return {"tokens": jax.ShapeDtypeStruct((b,), "int32")}
+
+    def cache_specs(self, shape: ShapeConfig):
+        raise NotImplementedError
+
+
+# =========================== decoder-only ==================================
+
+
+class DecoderLM(BaseLM):
+    """Dense / MoE / VLM decoder-only LM with scan-over-layers."""
+
+    def __init__(self, cfg, moe_group=moe_mod.DEFAULT_GROUP):
+        super().__init__(cfg)
+        self.is_moe = cfg.moe is not None
+        self.is_vlm = cfg.family == "vlm"
+        self.moe_group = moe_group
+
+    def _layer_defs(self):
+        if not self.is_moe:
+            return layer_defs(self.cfg)
+        defs = {}
+        defs.update({f"ln1_{k}": v
+                     for k, v in norm_defs(self.cfg).items()})
+        defs.update({f"attn_{k}": v
+                     for k, v in attn.attn_defs(self.cfg).items()})
+        defs.update({f"ln2_{k}": v
+                     for k, v in norm_defs(self.cfg).items()})
+        defs.update({f"moe_{k}": v for k, v in moe_mod.moe_defs(self.cfg).items()})
+        return defs
+
+    def param_defs(self):
+        defs = _embed_defs(self.cfg)
+        defs["layers"] = stack_defs(self._layer_defs(), self.cfg.n_layers)
+        return defs
+
+    # ---- forward over stacked layers ----
+
+    def _moe_layer(self, lp, x, aux):
+        cfg = self.cfg
+        h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
+        q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h)
+        o = attn.attention_core(cfg, q, k, v, causal=True)
+        x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
+        h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
+        y, a = moe_mod.apply_moe(cfg, _sub(lp, "moe_"), h,
+                                 group_size=self.moe_group)
+        return x + y, aux + a
+
+    def _forward(self, params, x, remat=True):
+        cfg = self.cfg
+        if self.is_moe:
+            def body(carry, lp):
+                x, aux = carry
+                x, aux = self._moe_layer(lp, x, aux)
+                return (x, aux), None
+            f = jax.checkpoint(body) if remat else body
+            (x, aux), _ = jax.lax.scan(f, (x, jnp.zeros((), jnp.float32)),
+                                       params["layers"])
+            return x, aux
+        def body(carry, lp):
+            return dense_layer(cfg, lp, carry, causal=True), None
+        f = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(f, x, params["layers"])
+        return x, jnp.zeros((), jnp.float32)
+
+    def _inputs(self, params, batch):
+        x = self._embed(params, batch["tokens"])
+        if self.is_vlm:
+            patches = batch["patches"].astype(self.compute_dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+        return shard_act(x, "batch", "seq", "embed")
+
+    def loss(self, params, batch):
+        x = self._inputs(params, batch)
+        x, aux = self._forward(params, x)
+        if self.is_vlm:
+            npatch = self.cfg.n_frontend_tokens
+            x = x[:, npatch:]
+        ce = self._ce(params, x, batch["labels"], batch.get("mask"))
+        return ce + aux, {"ce": ce, "aux_loss": aux}
+
+    # ---- prefill / decode ----
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        x = self._inputs(params, batch)
+
+        if self.is_moe:
+            def body(carry, lp):
+                x, aux = carry
+                h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
+                q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h)
+                o = attn.attention_core(cfg, q, k, v, causal=True)
+                x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
+                h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
+                y, a = moe_mod.apply_moe(cfg, _sub(lp, "moe_"), h,
+                                         group_size=self.moe_group)
+                return (x + y, aux + a), (k, v)
+            (x, _), (ks, vs) = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+        else:
+            def body(x, lp):
+                x, k, v = prefill_layer(cfg, lp, x)
+                return x, (k, v)
+            x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        cache = {"k": ks.astype("bfloat16"), "v": vs.astype("bfloat16"),
+                 "index": jnp.asarray(x.shape[1], jnp.int32)}
+        return cache, logits
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = self._embed(params, tokens)[:, None, :]
+        index = cache["index"]
+
+        if self.is_moe:
+            def body(carry, inp):
+                x, aux = carry
+                lp, ck, cv = inp
+                h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
+                pos = jnp.full((x.shape[0], 1), index, jnp.int32)
+                q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h,
+                                           positions=pos)
+                ck, cv = attn.cache_update(ck, cv, k, v, index)
+                o = attn.decode_attention(cfg, q, ck, cv, index)
+                x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
+                h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
+                y, a = moe_mod.apply_moe(cfg, _sub(lp, "moe_"), h,
+                                         group_size=self.moe_group)
+                return (x + y, aux + a), (ck, cv)
+            (x, _), (ck, cv) = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)),
+                (params["layers"], cache["k"], cache["v"]))
+        else:
+            def body(x, inp):
+                lp, ck, cv = inp
+                x, ck, cv = decode_layer(cfg, lp, x, ck, cv, index)
+                return x, (ck, cv)
+            x, (ck, cv) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+
+        logits = self._logits(params, x)[:, 0]
+        return {"k": ck, "v": cv, "index": index + 1}, logits
+
+    # ---- specs ----
+
+    def batch_specs(self, shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        cd = self.compute_dtype
+        if not self.is_vlm:
+            return super().batch_specs(shape)
+        npatch = self.cfg.n_frontend_tokens
+        if shape.kind == "train":
+            return {
+                "patches": jax.ShapeDtypeStruct((b, npatch, self.cfg.d_model), cd),
+                "tokens": jax.ShapeDtypeStruct((b, s - npatch), "int32"),
+                "labels": jax.ShapeDtypeStruct((b, s - npatch), "int32"),
+            }
+        if shape.kind == "prefill":
+            return {
+                "patches": jax.ShapeDtypeStruct((b, npatch, self.cfg.d_model), cd),
+                "tokens": jax.ShapeDtypeStruct((b, s - npatch), "int32"),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b,), "int32")}
+
+    def cache_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        kv, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+        return {
+            "k": jax.ShapeDtypeStruct((L, b, s, kv, hd), "bfloat16"),
+            "v": jax.ShapeDtypeStruct((L, b, s, kv, hd), "bfloat16"),
+            "index": jax.ShapeDtypeStruct((), "int32"),
+        }
+
+    def cache_axes(self, shape: ShapeConfig):
+        kvax = ("_", "batch", "kv_seq", "_", "_")
+        return {"k": kvax, "v": kvax, "index": ()}
+
+
+# ========================= whisper (enc-dec) ================================
+
+
+class WhisperLM(BaseLM):
+    def param_defs(self):
+        cfg = self.cfg
+        defs = _embed_defs(cfg)
+        defs["encoder"] = stack_defs(layer_defs(cfg), cfg.encoder_layers)
+        defs["enc_final"] = norm_defs(cfg)
+        defs["decoder"] = stack_defs(layer_defs(cfg, cross_attention=True),
+                                     cfg.n_layers)
+        return defs
+
+    def _encode(self, params, frames, remat=True):
+        cfg = self.cfg
+        pos = sinusoidal_positions(frames.shape[1], cfg.d_model)
+        x = frames.astype(self.compute_dtype) + pos.astype(self.compute_dtype)
+        x = shard_act(x, "batch", "seq", "embed")
+
+        def body(x, lp):
+            return dense_layer(cfg, lp, x, causal=False), None
+        f = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(f, x, params["encoder"])
+        return apply_norm(cfg, params["enc_final"], x, name="norm")
+
+    def _cross_kv(self, params, enc):
+        """Per-decoder-layer cross K/V from encoder output: (L,b,se,kv,hd)."""
+        cfg = self.cfg
+
+        def body(_, lp):
+            xp = _sub(lp, "xattn_")
+            cd = enc.dtype
+            k = jnp.einsum("bsd,dhk->bshk", enc, xp["wk"].astype(cd))
+            v = jnp.einsum("bsd,dhk->bshk", enc, xp["wv"].astype(cd))
+            return 0, (k, v)
+        _, (ks, vs) = jax.lax.scan(body, 0, params["decoder"])
+        return ks, vs
+
+    def _decode_stack(self, params, x, xks, xvs, remat=True):
+        cfg = self.cfg
+
+        def body(x, inp):
+            lp, xk, xv = inp
+            return dense_layer(cfg, lp, x, causal=True,
+                               cross_kv=(xk, xv)), None
+        f = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(f, x, (params["decoder"], xks, xvs))
+        return x
+
+    def _dec_inputs(self, params, tokens, offset=0):
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        pos = sinusoidal_positions(offset + tokens.shape[1], cfg.d_model)
+        x = x + pos[offset:].astype(x.dtype)
+        return shard_act(x, "batch", "seq", "embed")
+
+    def loss(self, params, batch):
+        enc = self._encode(params, batch["frames"])
+        xks, xvs = self._cross_kv(params, enc)
+        x = self._dec_inputs(params, batch["tokens"])
+        x = self._decode_stack(params, x, xks, xvs)
+        ce = self._ce(params, x, batch["labels"], batch.get("mask"))
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        enc = self._encode(params, batch["frames"], remat=False)
+        xks, xvs = self._cross_kv(params, enc)
+        x = self._dec_inputs(params, batch["tokens"])
+
+        def body(x, inp):
+            lp, xk, xv = inp
+            h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
+            q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h)
+            o = attn.attention_core(cfg, q, k, v, causal=True)
+            x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
+            h = apply_norm(cfg, _sub(lp, "lnx_"), x, name="norm")
+            qx = jnp.einsum("bsd,dhk->bshk", h, lp["xattn_wq"].astype(h.dtype))
+            o = attn.attention_core(cfg, qx, xk, xv, causal=False)
+            x = x + attn.out_proj(cfg, _sub(lp, "xattn_"), o)
+            h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
+            from repro.models.transformer import apply_mlp
+            x = x + apply_mlp(cfg, lp, h, prefix="mlp_")
+            return x, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["decoder"], xks, xvs))
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        cache = {"k": ks.astype("bfloat16"), "v": vs.astype("bfloat16"),
+                 "xk": xks.astype("bfloat16"), "xv": xvs.astype("bfloat16"),
+                 "index": jnp.asarray(x.shape[1], jnp.int32)}
+        return cache, logits
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        index = cache["index"]
+        x = self._embed(params, tokens)[:, None, :]
+        # sinusoidal position at `index`, computed directly (no table)
+        dim = jnp.arange(cfg.d_model // 2, dtype=jnp.float32)
+        inv = jnp.exp(-jnp.log(10_000.0) * dim / (cfg.d_model // 2))
+        ang = index.astype(jnp.float32) * inv
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+        x = x + pe.astype(x.dtype)
+
+        def body(x, inp):
+            lp, ck, cv, xk, xv = inp
+            x, ck, cv = decode_layer(cfg, lp, x, ck, cv, index,
+                                     cross_kv=(xk, xv))
+            return x, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["decoder"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        logits = self._logits(params, x)[:, 0]
+        new = dict(cache, k=ck, v=cv, index=index + 1)
+        return new, logits
+
+    def batch_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        cd = self.compute_dtype
+        if shape.kind == "train":
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), cd),
+                    "tokens": jax.ShapeDtypeStruct((b, s), "int32"),
+                    "labels": jax.ShapeDtypeStruct((b, s), "int32")}
+        if shape.kind == "prefill":
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), cd),
+                    "tokens": jax.ShapeDtypeStruct((b, s), "int32")}
+        return {"tokens": jax.ShapeDtypeStruct((b,), "int32")}
+
+    def cache_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        kv, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+        se = WHISPER_DECODE_ENC_FRAMES
+        return {
+            "k": jax.ShapeDtypeStruct((L, b, s, kv, hd), "bfloat16"),
+            "v": jax.ShapeDtypeStruct((L, b, s, kv, hd), "bfloat16"),
+            "xk": jax.ShapeDtypeStruct((L, b, se, kv, hd), "bfloat16"),
+            "xv": jax.ShapeDtypeStruct((L, b, se, kv, hd), "bfloat16"),
+            "index": jax.ShapeDtypeStruct((), "int32"),
+        }
+
+    def cache_axes(self, shape: ShapeConfig):
+        kvax = ("_", "batch", "kv_seq", "_", "_")
+        xax = ("_", "batch", "_", "_", "_")
+        return {"k": kvax, "v": kvax, "xk": xax, "xv": xax, "index": ()}
+
+
+# ============================ zamba hybrid ==================================
+
+
+class ZambaLM(BaseLM):
+    def param_defs(self):
+        defs = _embed_defs(self.cfg)
+        defs.update(zamba_mod.zamba_defs(self.cfg))
+        return defs
+
+    def loss(self, params, batch):
+        x = self._embed(params, batch["tokens"])
+        x = shard_act(x, "batch", "seq", "embed")
+        x = zamba_mod.zamba_forward(self.cfg, params, x)
+        ce = self._ce(params, x, batch["labels"], batch.get("mask"))
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch):
+        x = self._embed(params, batch["tokens"])
+        x, mamba_states, attn_kv = zamba_mod.zamba_prefill(self.cfg, params, x)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        ks = jnp.stack([k for k, _ in attn_kv]).astype("bfloat16")
+        vs = jnp.stack([v for _, v in attn_kv]).astype("bfloat16")
+        cache = {"mamba": mamba_states, "k": ks, "v": vs,
+                 "index": jnp.asarray(x.shape[1], jnp.int32)}
+        return cache, logits
+
+    def decode_step(self, params, cache, tokens):
+        x = self._embed(params, tokens)[:, None, :]
+        x, new_state = zamba_mod.zamba_decode(self.cfg, params, x, cache)
+        logits = self._logits(params, x)[:, 0]
+        return new_state, logits
+
+    def cache_specs(self, shape: ShapeConfig):
+        return zamba_mod.zamba_state_specs(self.cfg, shape.global_batch,
+                                           shape.seq_len)
+
+    def cache_axes(self, shape: ShapeConfig):
+        mst = {"ssm": ("batch", "_", "_", "_"), "conv": ("batch", "_", "_")}
+        kvax = ("_", "batch", "kv_seq", "_", "_")
+        return {"mamba": [mst for _ in range(self.cfg.n_layers)],
+                "k": kvax, "v": kvax, "index": ()}
+
+
+# ============================== xLSTM =======================================
+
+
+class XLSTMLM(BaseLM):
+    def param_defs(self):
+        cfg = self.cfg
+        defs = _embed_defs(cfg)
+        for i, kind in enumerate(cfg.block_pattern):
+            if kind == "m":
+                defs[f"block_{i}"] = xlstm_mod.mlstm_block_defs(cfg)
+            else:
+                defs[f"block_{i}"] = xlstm_mod.slstm_block_defs(cfg)
+        return defs
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"])
+        x = shard_act(x, "batch", "seq", "embed")
+        for i, kind in enumerate(cfg.block_pattern):
+            blk = params[f"block_{i}"]
+            if kind == "m":
+                f = jax.checkpoint(
+                    lambda bp, xx: xlstm_mod.apply_mlstm_block(cfg, bp, xx))
+            else:
+                f = jax.checkpoint(
+                    lambda bp, xx: xlstm_mod.apply_slstm_block(cfg, bp, xx))
+            x = f(blk, x)
+        ce = self._ce(params, x, batch["labels"], batch.get("mask"))
+        return ce, {"ce": ce}
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"])
+        states = []
+        for i, kind in enumerate(cfg.block_pattern):
+            blk = params[f"block_{i}"]
+            if kind == "m":
+                x, st = xlstm_mod.mlstm_block_prefill(cfg, blk, x)
+            else:
+                x, st = xlstm_mod.slstm_block_prefill(cfg, blk, x)
+            states.append(st)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        return {"blocks": states,
+                "index": jnp.asarray(x.shape[1], jnp.int32)}, logits
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = self._embed(params, tokens)[:, None, :]
+        new_states = []
+        for i, kind in enumerate(cfg.block_pattern):
+            blk = params[f"block_{i}"]
+            st = cache["blocks"][i]
+            if kind == "m":
+                x, st = xlstm_mod.mlstm_block_decode(cfg, blk, x, st)
+            else:
+                x, st = xlstm_mod.slstm_block_decode(cfg, blk, x, st)
+            new_states.append(st)
+        logits = self._logits(params, x)[:, 0]
+        return {"blocks": new_states, "index": cache["index"] + 1}, logits
+
+    def cache_specs(self, shape: ShapeConfig):
+        return {
+            "blocks": xlstm_mod.xlstm_state_specs(self.cfg,
+                                                  shape.global_batch),
+            "index": jax.ShapeDtypeStruct((), "int32"),
+        }
+
+    def cache_axes(self, shape: ShapeConfig):
+        mst = {"C": ("batch", "_", "_", "_"), "n": ("batch", "_", "_"),
+               "m": ("batch", "_"), "conv": ("batch", "_", "_")}
+        sst = {"c": ("batch", "_", "_"), "n": ("batch", "_", "_"),
+               "m": ("batch", "_", "_"), "h": ("batch", "_", "_")}
+        return {"blocks": [mst if k == "m" else sst
+                           for k in self.cfg.block_pattern],
+                "index": ()}
+
+
+# ============================== factory =====================================
+
+
+def build_model(cfg: ModelConfig, *, moe_group: int | None = None) -> BaseLM:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg, moe_group=moe_group or moe_mod.DEFAULT_GROUP)
+    if cfg.family == "audio":
+        return WhisperLM(cfg)
+    if cfg.family == "hybrid":
+        return ZambaLM(cfg)
+    if cfg.family == "ssm":
+        return XLSTMLM(cfg)
+    raise ValueError(cfg.family)

@@ -1,0 +1,79 @@
+"""Single-source parameter schema.
+
+Each model defines ``param_defs(cfg) -> nested dict of ParamDef``.  From that
+one schema we derive (a) real initialized arrays for CPU smoke runs,
+(b) ``ShapeDtypeStruct`` stand-ins for the dry-run (no allocation), and
+(c) ``PartitionSpec`` trees via a logical-axis resolver (HaiScale layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple                   # logical axis names, len == len(shape)
+    init: str = "normal"          # normal | zeros | ones | embed | small
+    scale: float = 0.0            # 0 => fan-in default
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def p(shape, axes, init="normal", scale=0.0, dtype="float32") -> ParamDef:
+    return ParamDef(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _tree_map(fn: Callable, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_def)
+
+
+def _init_one(d: ParamDef, key) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    fan_in = d.shape[0] if len(d.shape) == 1 else int(np.prod(d.shape[:-1]))
+    if d.init == "embed":
+        std = d.scale or 1.0
+    elif d.init == "small":
+        std = d.scale or 0.02
+    else:
+        std = d.scale or (1.0 / math.sqrt(max(fan_in, 1)))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(d.dtype)
+
+
+def init_tree(defs, rng) -> dict:
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_one(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def shape_tree(defs, dtype_override: str | None = None):
+    """ShapeDtypeStructs (no allocation) — dry-run stand-ins."""
+    return _tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype_override or d.dtype),
+        defs)
+
+
+def spec_tree(defs, resolver) -> dict:
+    """PartitionSpec tree via ``resolver(logical_axes, shape) -> PartitionSpec``."""
+    return _tree_map(lambda d: resolver(d.axes, d.shape), defs)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))

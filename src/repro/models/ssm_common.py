@@ -1,0 +1,106 @@
+"""Shared sub-quadratic sequence-mixing helpers (Mamba2 SSD, mLSTM)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_conv1d(x, w, b=None):
+    """Depthwise causal conv. x (b, l, c), w (c, width) -> (b, l, c)."""
+    width = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    # gather shifted views: y[t] = sum_k x[t - width + 1 + k] * w[:, k]
+    segs = [xp[:, k:k + x.shape[1], :] * w[:, k] for k in range(width)]
+    y = sum(segs)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def conv_state_update(state, x_new, w, b=None):
+    """Streaming depthwise conv. state (b, width-1, c); x_new (b, 1, c)."""
+    width = w.shape[-1]
+    window = jnp.concatenate([state, x_new], axis=1)     # (b, width, c)
+    y = jnp.einsum("bwc,cw->bc", window, w)[:, None, :]
+    if b is not None:
+        y = y + b
+    return y, window[:, 1:, :]
+
+
+def segsum(a):
+    """a (..., c) log-decays -> (..., c, c): S[i,j]=sum_{j<k<=i} a_k, -inf above diag."""
+    c = a.shape[-1]
+    s = jnp.cumsum(a, axis=-1)
+    diff = s[..., :, None] - s[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a, B, C, chunk: int, h0=None):
+    """Chunked state-space-dual scan (Mamba-2, arXiv:2405.21060 §6).
+
+    x (b,l,h,p): inputs (already scaled by dt); a (b,l,h): log decay per step
+    (dt*A, <=0); B (b,l,n), C (b,l,n) shared across heads (ngroups=1).
+    Returns y (b,l,h,p), final state (b,h,p,n).
+
+    Sequential ``lax.scan`` over chunks (the recurrence), full matmul form
+    within a chunk (the MXU-friendly part — mirrored by kernels/ssd_scan).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    xr = x.reshape(b, nc, chunk, h, p)
+    ar = a.reshape(b, nc, chunk, h)
+    Br = B.reshape(b, nc, chunk, n)
+    Cr = C.reshape(b, nc, chunk, n)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(hprev, inp):
+        xc, ac, Bc, Cc = inp          # (b,c,h,p), (b,c,h), (b,c,n), (b,c,n)
+        ac = ac.astype(jnp.float32)
+        L = jnp.exp(segsum(jnp.moveaxis(ac, -1, 1)))       # (b,h,c,c)
+        # intra-chunk (diag) term
+        scores = jnp.einsum("bln,bsn->bls", Cc.astype(jnp.float32),
+                            Bc.astype(jnp.float32))        # (b,c,c)
+        y_diag = jnp.einsum("bls,bhls,bshp->blhp", scores, L,
+                            xc.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        cum = jnp.cumsum(ac, axis=1)                       # (b,c,h)
+        y_off = jnp.einsum("bln,bhpn,blh->blhp", Cc.astype(jnp.float32),
+                           hprev, jnp.exp(cum))
+        # new carried state
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)       # (b,c,h)
+        hnew = jnp.einsum("bsh,bshp,bsn->bhpn", decay_to_end,
+                          xc.astype(jnp.float32), Bc.astype(jnp.float32))
+        hnew = hnew + hprev * jnp.exp(cum[:, -1, :])[:, :, None, None]
+        return hnew, (y_diag + y_off).astype(x.dtype)
+
+    xs = (jnp.moveaxis(xr, 1, 0), jnp.moveaxis(ar, 1, 0),
+          jnp.moveaxis(Br, 1, 0), jnp.moveaxis(Cr, 1, 0))
+    hfin, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, h, p)
+    return y, hfin
+
+
+def ssd_recurrent_step(hprev, x_t, a_t, B_t, C_t):
+    """One decode step. hprev (b,h,p,n); x_t (b,h,p); a_t (b,h); B/C (b,n)."""
+    decay = jnp.exp(a_t.astype(jnp.float32))[:, :, None, None]
+    hnew = hprev * decay + jnp.einsum("bhp,bn->bhpn", x_t.astype(jnp.float32),
+                                      B_t.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", hnew, C_t.astype(jnp.float32))
+    return hnew, y.astype(x_t.dtype)
+
+
+def ssd_reference(x, a, B, C):
+    """O(l^2) oracle for ssd_chunked (tests only)."""
+    b, l, h, p = x.shape
+    s = jnp.cumsum(a.astype(jnp.float32), axis=1)              # (b,l,h)
+    diff = s[:, :, None, :] - s[:, None, :, :]                 # (b,l,s,h)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    L = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bln,bsn->bls", C.astype(jnp.float32),
+                        B.astype(jnp.float32))
+    y = jnp.einsum("bls,blsh,bshp->blhp", scores, L, x.astype(jnp.float32))
+    return y.astype(x.dtype)

@@ -1,0 +1,353 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunked-parallel)
+and sLSTM (scalar memory, sequential scan with block-diagonal recurrence).
+
+The mLSTM chunked form is exactly equivalent to the stabilized recurrence
+(tested against ``mlstm_recurrent_ref``); cross-chunk state is carried like
+the SSD scan, making train/prefill MXU-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_norm
+from repro.models.params import p
+from repro.models.ssm_common import causal_conv1d, conv_state_update
+from repro.parallel.axes import shard_act
+
+NEG_INF = -1e30
+
+
+# ======================== mLSTM cell (chunked) =============================
+
+
+def mlstm_chunked(q, k, v, ig, lf, chunk, state=None):
+    """q,k,v (b,l,h,dh); ig (b,l,h) input-gate preact; lf (b,l,h) log-forget.
+
+    Returns (out (b,l,h,dh), state=(C (b,h,dh,dh), n (b,h,dh), m (b,h))).
+    """
+    b, l, h, dh = q.shape
+    scale = dh ** -0.5
+    c = min(chunk, l)
+    assert l % c == 0
+    nc = l // c
+    qs = jnp.moveaxis(q.reshape(b, nc, c, h, dh), 1, 0)
+    ks = jnp.moveaxis(k.reshape(b, nc, c, h, dh), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nc, c, h, dh), 1, 0)
+    igs = jnp.moveaxis(ig.reshape(b, nc, c, h), 1, 0)
+    lfs = jnp.moveaxis(lf.reshape(b, nc, c, h), 1, 0)
+    if state is None:
+        state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+                 jnp.zeros((b, h, dh), jnp.float32),
+                 jnp.full((b, h), NEG_INF, jnp.float32))
+
+    def step(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, ic, fc = inp
+        ic = ic.astype(jnp.float32)
+        fc = fc.astype(jnp.float32)
+        cumf = jnp.cumsum(fc, axis=1)                        # (b,c,h) inclusive
+        logD = (cumf[:, :, None, :] - cumf[:, None, :, :] +
+                ic[:, None, :, :])                           # (b,i,j,h)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        logD = jnp.where(mask[None, :, :, None], logD, NEG_INF)
+        b_i = cumf + m[:, None, :]                           # (b,c,h)
+        m_i = jnp.maximum(jnp.max(logD, axis=2), b_i)        # (b,c,h)
+        S = jnp.einsum("bihd,bjhd->bijh", qc.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+        W = S * jnp.exp(logD - m_i[:, :, None, :])
+        inter = jnp.exp(b_i - m_i)                           # (b,c,h)
+        num = (jnp.einsum("bijh,bjhd->bihd", W, vc.astype(jnp.float32)) +
+               inter[..., None] *
+               jnp.einsum("bhde,bihd->bihe", C, qc.astype(jnp.float32) * scale))
+        den = (jnp.sum(W, axis=2) +
+               inter * jnp.einsum("bhd,bihd->bih", n,
+                                  qc.astype(jnp.float32) * scale))
+        out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # ---- carry state to next chunk ----
+        m_last = m_i[:, -1, :]                               # (b,h)
+        w_j = jnp.exp(cumf[:, -1:, :] - cumf + ic - m_last[:, None, :])
+        decay = jnp.exp(cumf[:, -1, :] + m - m_last)         # (b,h)
+        C_new = (decay[:, :, None, None] * C +
+                 jnp.einsum("bjh,bjhd,bjhe->bhde", w_j,
+                            kc.astype(jnp.float32), vc.astype(jnp.float32)))
+        n_new = (decay[..., None] * n +
+                 jnp.einsum("bjh,bjhd->bhd", w_j, kc.astype(jnp.float32)))
+        return (C_new, n_new, m_last), out.astype(q.dtype)
+
+    state, ys = jax.lax.scan(step, state, (qs, ks, vs, igs, lfs))
+    out = jnp.moveaxis(ys, 0, 1).reshape(b, l, h, dh)
+    return out, state
+
+
+def mlstm_step(state, q, k, v, ig, lf):
+    """One decode step. q,k,v (b,h,dh); ig,lf (b,h)."""
+    C, n, m = state
+    scale = q.shape[-1] ** -0.5
+    ig = ig.astype(jnp.float32)
+    lf = lf.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, ig)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(ig - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = fp[..., None, None] * C + ip[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", kf, vf)
+    n = fp[..., None] * n + ip[..., None] * kf
+    qf = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhde,bhd->bhe", C, qf)
+    den = jnp.einsum("bhd,bhd->bh", n, qf)
+    out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return (C, n, m_new), out.astype(q.dtype)
+
+
+def mlstm_recurrent_ref(q, k, v, ig, lf):
+    """Token-by-token oracle for mlstm_chunked (tests only)."""
+    b, l, h, dh = q.shape
+    state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+             jnp.zeros((b, h, dh), jnp.float32),
+             jnp.full((b, h), NEG_INF, jnp.float32))
+
+    def step(state, inp):
+        qt, kt, vt, it, ft = inp
+        state, out = mlstm_step(state, qt, kt, vt, it, ft)
+        return state, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, ig, lf))
+    _, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+# ====================== sLSTM cell (sequential) ============================
+
+
+def slstm_scan(zx, ix, fx, ox, R, state=None):
+    """zx/ix/fx/ox (b,l,h,dh) gate preactivations from the input;
+    R (4,h,dh,dh) block-diagonal recurrent weights (z,i,f,o order).
+    Returns (h_out (b,l,h,dh), state=(c,n,m,hprev))."""
+    b, l, h, dh = zx.shape
+    if state is None:
+        z0 = jnp.zeros((b, h, dh), jnp.float32)
+        state = (z0, z0 + 1e-6, jnp.full((b, h, dh), -10.0, jnp.float32), z0)
+
+    Rf32 = R.astype(jnp.float32)
+
+    def step(carry, inp):
+        c, n, m, hp = carry
+        zt, it, ft, ot = (a.astype(jnp.float32) for a in inp)
+        rec = jnp.einsum("ghde,bhd->gbhe", Rf32, hp)          # (4,b,h,dh)
+        z = jnp.tanh(zt + rec[0])
+        i_pre = it + rec[1]
+        f_pre = ft + rec[2]
+        o = jax.nn.sigmoid(ot + rec[3])
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        ip = jnp.exp(i_pre - m_new)
+        fp = jnp.exp(logf + m - m_new)
+        c_new = fp * c + ip * z
+        n_new = fp * n + ip
+        hout = o * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, m_new, hout), hout
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (zx, ix, fx, ox))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(zx.dtype), state
+
+
+# =========================== blocks ========================================
+
+
+def _heads(cfg):
+    d_in = cfg.ssm.expand * cfg.d_model
+    return d_in, cfg.n_heads, d_in // cfg.n_heads
+
+
+def mlstm_block_defs(cfg):
+    d = cfg.d_model
+    d_in, h, dh = _heads(cfg)
+    return {
+        "ln_scale": p((d,), ("embed",), init="ones"),
+        "w_x": p((d, d_in), ("embed", "ssm_inner")),
+        "w_z": p((d, d_in), ("embed", "ssm_inner")),
+        "conv_w": p((d_in, cfg.ssm.conv_width), ("ssm_inner", "conv"),
+                    init="small"),
+        "conv_b": p((d_in,), ("ssm_inner",), init="zeros"),
+        "w_q": p((d_in, d_in), ("ssm_inner", "heads")),
+        "w_k": p((d_in, d_in), ("ssm_inner", "heads")),
+        "w_v": p((d_in, d_in), ("ssm_inner", "heads")),
+        "w_i": p((d_in, h), ("ssm_inner", "gates"), init="small"),
+        "w_f": p((d_in, h), ("ssm_inner", "gates"), init="small"),
+        "b_i": p((h,), ("gates",), init="zeros"),
+        "b_f": p((h,), ("gates",), init="ones"),
+        "gn_scale": p((d_in,), ("ssm_inner",), init="ones"),
+        "w_down": p((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mlstm_qkvgates(cfg, params, x):
+    d_in, h, dh = _heads(cfg)
+    b, l, _ = x.shape
+    cd = x.dtype
+    ln = x.astype(jnp.float32)
+    ln = (ln * jax.lax.rsqrt(jnp.mean(jnp.square(ln), -1, keepdims=True)
+                             + 1e-6) * params["ln_scale"]).astype(cd)
+    xu = ln @ params["w_x"].astype(cd)
+    z = ln @ params["w_z"].astype(cd)
+    return xu, z
+
+
+def _mlstm_inner(cfg, params, xu, conv_fn):
+    d_in, h, dh = _heads(cfg)
+    b, l = xu.shape[0], xu.shape[1]
+    cd = xu.dtype
+    xc = conv_fn(xu)
+    q = (xc @ params["w_q"].astype(cd)).reshape(b, l, h, dh)
+    k = (xc @ params["w_k"].astype(cd)).reshape(b, l, h, dh)
+    v = (xu @ params["w_v"].astype(cd)).reshape(b, l, h, dh)
+    ig = xu @ params["w_i"].astype(cd) + params["b_i"].astype(cd)
+    fg = xu @ params["w_f"].astype(cd) + params["b_f"].astype(cd)
+    lf = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    return q, k, v, ig, lf
+
+
+def _mlstm_out(cfg, params, hcell, z, x):
+    d_in, h, dh = _heads(cfg)
+    b, l = z.shape[0], z.shape[1]
+    cd = z.dtype
+    y = hcell.reshape(b, l, h, dh).astype(jnp.float32)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6)
+    y = (y.reshape(b, l, d_in) * params["gn_scale"]).astype(cd)
+    y = y * jax.nn.silu(z)
+    return x + y @ params["w_down"].astype(cd)
+
+
+def apply_mlstm_block(cfg, params, x):
+    xu, z = _mlstm_qkvgates(cfg, params, x)
+    conv = lambda xc: jax.nn.silu(causal_conv1d(
+        xc, params["conv_w"].astype(xc.dtype),
+        params["conv_b"].astype(xc.dtype)))
+    q, k, v, ig, lf = _mlstm_inner(cfg, params, xu, conv)
+    hcell, _ = mlstm_chunked(q, k, v, ig, lf, cfg.ssm.chunk_size)
+    return _mlstm_out(cfg, params, hcell, z, x)
+
+
+def mlstm_block_prefill(cfg, params, x):
+    xu, z = _mlstm_qkvgates(cfg, params, x)
+    conv_state = xu[:, -(cfg.ssm.conv_width - 1):, :]
+    conv = lambda xc: jax.nn.silu(causal_conv1d(
+        xc, params["conv_w"].astype(xc.dtype),
+        params["conv_b"].astype(xc.dtype)))
+    q, k, v, ig, lf = _mlstm_inner(cfg, params, xu, conv)
+    hcell, (C, n, m) = mlstm_chunked(q, k, v, ig, lf, cfg.ssm.chunk_size)
+    out = _mlstm_out(cfg, params, hcell, z, x)
+    return out, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+def mlstm_block_decode(cfg, params, x, state):
+    d_in, h, dh = _heads(cfg)
+    b = x.shape[0]
+    xu, z = _mlstm_qkvgates(cfg, params, x)
+    y_conv, conv_state = conv_state_update(
+        state["conv"], xu, params["conv_w"].astype(xu.dtype),
+        params["conv_b"].astype(xu.dtype))
+    conv = lambda _: jax.nn.silu(y_conv)
+    q, k, v, ig, lf = _mlstm_inner(cfg, params, xu, conv)
+    cell_state = (state["C"], state["n"], state["m"])
+    cell_state, out = mlstm_step(cell_state, q[:, 0], k[:, 0], v[:, 0],
+                                 ig[:, 0], lf[:, 0])
+    out = _mlstm_out(cfg, params, out[:, None], z, x)
+    C, n, m = cell_state
+    return out, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+def slstm_block_defs(cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ff = int(round(d * 4 / 3 / 64) * 64)
+    return {
+        "ln_scale": p((d,), ("embed",), init="ones"),
+        "w_gates": p((d, 4 * d), ("embed", "gates")),
+        "b_gates": p((4 * d,), ("gates",), init="zeros"),
+        "R": p((4, h, dh, dh), ("gates", "heads", "head_dim", "head_dim"),
+               init="small"),
+        "gn_scale": p((d,), ("embed",), init="ones"),
+        "ff_gate": p((d, ff), ("embed", "mlp")),
+        "ff_up": p((d, ff), ("embed", "mlp")),
+        "ff_down": p((ff, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_pre(cfg, params, x):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    b, l, _ = x.shape
+    cd = x.dtype
+    ln = x.astype(jnp.float32)
+    ln = (ln * jax.lax.rsqrt(jnp.mean(jnp.square(ln), -1, keepdims=True)
+                             + 1e-6) * params["ln_scale"]).astype(cd)
+    g = ln @ params["w_gates"].astype(cd) + params["b_gates"].astype(cd)
+    zx, ix, fx, ox = jnp.split(g, 4, axis=-1)
+    rs = lambda a: a.reshape(b, l, h, dh)
+    return rs(zx), rs(ix), rs(fx), rs(ox)
+
+
+def _slstm_post(cfg, params, hcell, x):
+    b, l = x.shape[0], x.shape[1]
+    d = cfg.d_model
+    cd = x.dtype
+    y = hcell.reshape(b, l, d).astype(jnp.float32)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6)
+    y = (y * params["gn_scale"]).astype(cd)
+    x = x + y
+    ffin = x
+    hgate = jax.nn.gelu(ffin @ params["ff_gate"].astype(cd))
+    hup = ffin @ params["ff_up"].astype(cd)
+    return x + (hgate * hup) @ params["ff_down"].astype(cd)
+
+
+def apply_slstm_block(cfg, params, x):
+    zx, ix, fx, ox = _slstm_pre(cfg, params, x)
+    hcell, _ = slstm_scan(zx, ix, fx, ox, params["R"])
+    return _slstm_post(cfg, params, hcell, x)
+
+
+def slstm_block_prefill(cfg, params, x):
+    zx, ix, fx, ox = _slstm_pre(cfg, params, x)
+    hcell, (c, n, m, hp) = slstm_scan(zx, ix, fx, ox, params["R"])
+    return _slstm_post(cfg, params, hcell, x), {"c": c, "n": n, "m": m,
+                                                "h": hp}
+
+
+def slstm_block_decode(cfg, params, x, state):
+    zx, ix, fx, ox = _slstm_pre(cfg, params, x)
+    st = (state["c"], state["n"], state["m"], state["h"])
+    hcell, (c, n, m, hp) = slstm_scan(zx, ix, fx, ox, params["R"], state=st)
+    return _slstm_post(cfg, params, hcell, x), {"c": c, "n": n, "m": m,
+                                                "h": hp}
+
+
+def xlstm_state_specs(cfg, batch: int, dtype="bfloat16"):
+    """Per-block decode-state specs, ordered by cfg.block_pattern."""
+    d_in, h, dh = _heads(cfg)
+    d = cfg.d_model
+    hs, dhs = cfg.n_heads, d // cfg.n_heads
+    out = []
+    for kind in cfg.block_pattern:
+        if kind == "m":
+            out.append({
+                "C": jax.ShapeDtypeStruct((batch, h, dh, dh), "float32"),
+                "n": jax.ShapeDtypeStruct((batch, h, dh), "float32"),
+                "m": jax.ShapeDtypeStruct((batch, h), "float32"),
+                "conv": jax.ShapeDtypeStruct(
+                    (batch, cfg.ssm.conv_width - 1, d_in), dtype),
+            })
+        else:
+            out.append({
+                "c": jax.ShapeDtypeStruct((batch, hs, dhs), "float32"),
+                "n": jax.ShapeDtypeStruct((batch, hs, dhs), "float32"),
+                "m": jax.ShapeDtypeStruct((batch, hs, dhs), "float32"),
+                "h": jax.ShapeDtypeStruct((batch, hs, dhs), "float32"),
+            })
+    return out

@@ -1,0 +1,147 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention+MLP block
+applied every ``attn_period`` layers (tied weights across invocations —
+per-invocation LoRA from the paper is a documented simplification)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models.params import p
+from repro.models.transformer import (dense_layer, decode_layer, layer_defs,
+                                      stack_defs)
+
+
+def segments(cfg) -> list[int]:
+    """Mamba-layer counts between shared-attention invocations."""
+    per, n = cfg.attn_period, cfg.n_layers
+    segs = [per] * (n // per)
+    if n % per:
+        segs.append(n % per)
+    return segs
+
+
+def n_attn_invocations(cfg) -> int:
+    return cfg.n_layers // cfg.attn_period
+
+
+def zamba_defs(cfg):
+    return {
+        "mamba": stack_defs(mamba2.mamba2_defs(cfg), cfg.n_layers),
+        "shared": layer_defs(cfg),
+        "pre_norm": stack_defs(
+            {"scale": p((cfg.d_model,), ("embed",), init="ones")},
+            cfg.n_layers),
+    }
+
+
+def _slice_tree(tree, start, end):
+    return jax.tree_util.tree_map(lambda a: a[start:end], tree)
+
+
+def _mamba_layer(cfg, x, lp):
+    xf = x.astype(jnp.float32)
+    xn = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True)
+                            + 1e-6)
+    xn = (xn * lp["pre_scale"]).astype(x.dtype)
+    return x + mamba2.apply_mamba2(cfg, lp, xn)
+
+
+def _run_segment(cfg, x, mamba_stack, pre_stack, remat=True):
+    def body(carry, inp):
+        lp, pn = inp
+        lp = dict(lp)
+        lp["pre_scale"] = pn["scale"]
+        return _mamba_layer(cfg, carry, lp), None
+
+    f = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(f, x, (mamba_stack, pre_stack))
+    return x
+
+
+def zamba_forward(cfg, params, x, *, remat=True):
+    """x (b, l, d) -> (b, l, d). Shared attn block after every segment."""
+    start = 0
+    # remat the shared block too: its chunked-attention internals otherwise
+    # dominate live memory (EXPERIMENTS.md §Perf, zamba iteration 2)
+    shared_fn = (jax.checkpoint(
+        lambda sp, h: dense_layer(cfg, sp, h, causal=True))
+        if remat else
+        lambda sp, h: dense_layer(cfg, sp, h, causal=True))
+    for si, seg in enumerate(segments(cfg)):
+        x = _run_segment(cfg, x,
+                         _slice_tree(params["mamba"], start, start + seg),
+                         _slice_tree(params["pre_norm"], start, start + seg),
+                         remat=remat)
+        start += seg
+        if si < n_attn_invocations(cfg):
+            x = shared_fn(params["shared"], x)
+    return x
+
+
+def zamba_prefill(cfg, params, x):
+    """Returns (x, mamba_states(list per layer), attn_kv(list per invocation))."""
+    mamba_states, attn_kv = [], []
+    start = 0
+    for si, seg in enumerate(segments(cfg)):
+        for li in range(start, start + seg):
+            lp = dict(_slice_tree(params["mamba"], li, li + 1))
+            lp = jax.tree_util.tree_map(lambda a: a[0], lp)
+            lp["pre_scale"] = params["pre_norm"]["scale"][li]
+            xf = x.astype(jnp.float32)
+            xn = xf * jax.lax.rsqrt(
+                jnp.mean(jnp.square(xf), -1, keepdims=True) + 1e-6)
+            xn = (xn * lp["pre_scale"]).astype(x.dtype)
+            out, st = mamba2.mamba2_prefill(cfg, lp, xn)
+            x = x + out
+            mamba_states.append(st)
+        start += seg
+        if si < n_attn_invocations(cfg):
+            from repro.models.transformer import prefill_layer
+            x, k, v = prefill_layer(cfg, params["shared"], x)
+            attn_kv.append((k, v))
+    return x, mamba_states, attn_kv
+
+
+def zamba_decode(cfg, params, x, state):
+    """x (b,1,d); state {"mamba": list, "k": (I,b,S,kv,hd), "v": ..., index}."""
+    index = state["index"]
+    new_mamba, inv = [], 0
+    ks, vs = [], []
+    start = 0
+    for si, seg in enumerate(segments(cfg)):
+        for li in range(start, start + seg):
+            lp = jax.tree_util.tree_map(lambda a: a[li],
+                                        dict(params["mamba"]))
+            lp["pre_scale"] = params["pre_norm"]["scale"][li]
+            xf = x.astype(jnp.float32)
+            xn = xf * jax.lax.rsqrt(
+                jnp.mean(jnp.square(xf), -1, keepdims=True) + 1e-6)
+            xn = (xn * lp["pre_scale"]).astype(x.dtype)
+            out, st = mamba2.mamba2_decode(cfg, lp, xn, state["mamba"][li])
+            x = x + out
+            new_mamba.append(st)
+        start += seg
+        if si < n_attn_invocations(cfg):
+            x, ck, cv = decode_layer(cfg, params["shared"], x,
+                                     state["k"][inv], state["v"][inv], index)
+            ks.append(ck)
+            vs.append(cv)
+            inv += 1
+    new_state = {"mamba": new_mamba,
+                 "k": jnp.stack(ks), "v": jnp.stack(vs),
+                 "index": index + 1}
+    return x, new_state
+
+
+def zamba_state_specs(cfg, batch: int, max_len: int, dtype="bfloat16"):
+    inv = n_attn_invocations(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "mamba": [mamba2.mamba2_state_specs(cfg, batch, dtype)
+                  for _ in range(cfg.n_layers)],
+        "k": jax.ShapeDtypeStruct((inv, batch, max_len, kv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((inv, batch, max_len, kv, hd), dtype),
+        "index": jax.ShapeDtypeStruct((), "int32"),
+    }

@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamW, clip_by_global_norm, global_norm
+from repro.optim.schedule import constant, warmup_cosine
+
+__all__ = ["AdamW", "clip_by_global_norm", "global_norm", "constant",
+           "warmup_cosine"]

@@ -1,0 +1,103 @@
+"""AdamW with fp32 master weights and mixed-precision working params.
+
+State layout (HaiScale FSDP / ZeRO rules, DESIGN.md §4):
+  params  : bf16 working copy  — sharded TP("model") + FSDP("data")
+  master  : fp32               — additionally sharded over "pod" (ZeRO-1)
+  m, v    : fp32 Adam moments  — same as master
+The cross-pod traffic per step is exactly: grads (1 shard, psum'd by
+autodiff/HFReduce) + the post-update bf16 param all-gather — the paper's
+"split optimizer step" (§V-B3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * scale, tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Union[float, Callable] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    param_dtype: str = "bfloat16"   # working-copy dtype
+    moments_dtype: str = "float32"  # m/v dtype; bf16 halves optimizer HBM
+                                    # (beyond-paper, needed for 405B @ 256
+                                    # v5e chips — see EXPERIMENTS.md §Perf)
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def init(self, params) -> dict:
+        zeros = lambda: jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, self.moments_dtype), params)
+        return {
+            "params": jax.tree_util.tree_map(
+                lambda x: x.astype(self.param_dtype), params),
+            # copy=True: keep master a distinct buffer even when params are
+            # fp32 (smoke runs) — donation must not see aliased args.
+            "master": jax.tree_util.tree_map(
+                lambda x: jnp.array(x, jnp.float32, copy=True), params),
+            "m": zeros(),
+            "v": zeros(),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def state_shapes(self, param_shapes) -> dict:
+        """ShapeDtypeStruct state tree from param ShapeDtypeStructs."""
+        sds = lambda dt: jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, dt), param_shapes)
+        return {"params": sds(self.param_dtype), "master": sds("float32"),
+                "m": sds(self.moments_dtype), "v": sds(self.moments_dtype),
+                "step": jax.ShapeDtypeStruct((), "int32")}
+
+    def apply(self, state, grads) -> dict:
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        mdt = self.moments_dtype
+
+        def upd(g, m, v, mast):
+            g = g.astype(jnp.float32)
+            m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            mast = mast - lr * (m / bc1 / (jnp.sqrt(v / bc2) + self.eps)
+                                + self.weight_decay * mast)
+            return m.astype(mdt), v.astype(mdt), mast
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_ma = treedef.flatten_up_to(state["master"])
+        new_m, new_v, new_ma, new_p = [], [], [], []
+        for g, mm, vv, ma in zip(flat_g, flat_m, flat_v, flat_ma):
+            mm, vv, ma = upd(g, mm, vv, ma)
+            new_m.append(mm)
+            new_v.append(vv)
+            new_ma.append(ma)
+            new_p.append(ma.astype(self.param_dtype))
+        uf = treedef.unflatten
+        return {"params": uf(new_p), "master": uf(new_ma), "m": uf(new_m),
+                "v": uf(new_v), "step": step}

@@ -1,0 +1,3 @@
+from repro.parallel.axes import Resolver, shard_act, use_resolver
+
+__all__ = ["Resolver", "shard_act", "use_resolver"]

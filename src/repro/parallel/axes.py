@@ -1,0 +1,160 @@
+"""Logical-axis resolution: HaiScale layout rules on the production mesh.
+
+Logical axis names used by the model zoo:
+
+  params:  vocab embed mlp heads kv_heads head_dim expert layers
+           ssm_inner state conv gates
+  acts:    batch seq embed heads kv_heads head_dim mlp expert cap
+
+The resolver maps logical axes -> mesh axes per ``ParallelConfig``, enforcing
+the Fire-Flyer rules (DESIGN.md §4):
+
+  * TP dims ("vocab","mlp","heads","expert", opt "kv_heads") -> "model"
+  * FSDP: one remaining dim of each >=2D param -> "data"   (intra-pod only!)
+  * optimizer master/moments additionally -> ("pod","data") (ZeRO-1 over pod)
+  * activations: "batch" -> pcfg.batch_axes, "seq" -> "model" when seq_shard
+
+Every mapping is divisibility-checked against the mesh; non-dividing axes are
+dropped (replicated) rather than erroring, so one rule set serves all archs.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ParallelConfig
+
+# Param logical axes eligible for TP (consume the "model" mesh axis).
+TP_AXES = ("vocab", "mlp", "heads", "expert", "moe_mlp")
+# Param logical axes eligible for FSDP (consume the "data" mesh axis);
+# in priority order — first present-and-dividing wins.  "vocab" precedes
+# "embed": FSDP-ing the embedding table on its *embed* dim makes the
+# lookup's output embed-sharded while the residual stream is batch-sharded,
+# and GSPMD's fallback is to replicate the full global activation
+# ("involuntary full rematerialization", ~4-8 GB/chip at gb=256 —
+# EXPERIMENTS.md §Perf).  Sharding the vocab dim instead keeps the gather
+# partitionable.
+FSDP_AXES = ("vocab", "embed", "mlp", "ssm_inner", "heads", "kv_heads")
+
+
+def _axis_size(mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+class Resolver:
+    """Maps logical param/activation axes to mesh PartitionSpecs."""
+
+    def __init__(self, mesh, pcfg: ParallelConfig, *,
+                 extra_fsdp_axes: tuple = ()):
+        self.mesh = mesh
+        self.pcfg = pcfg
+        # ZeRO-1: optimizer state shards over these additional axes
+        self.extra_fsdp_axes = tuple(a for a in extra_fsdp_axes
+                                     if a in mesh.shape)
+        self.has_pod = "pod" in mesh.shape
+
+    # ----------------- params -----------------
+
+    def param_spec(self, axes: tuple, shape: tuple) -> P:
+        out: list = [None] * len(axes)
+        used_model = False
+        if self.pcfg.tp > 1 or self.pcfg.ep > 1:
+            for i, (ax, dim) in enumerate(zip(axes, shape)):
+                if ax in TP_AXES and not used_model:
+                    m = _axis_size(self.mesh, "model")
+                    if m > 1 and dim % m == 0:
+                        out[i] = "model"
+                        used_model = True
+        if self.pcfg.fsdp:
+            wanted = {a for a in self.extra_fsdp_axes
+                      if a != "model" or not used_model}
+            wanted.add("data")
+            fsdp_axes = tuple(a for a in ("pod", "data", "model")
+                              if a in wanted)
+            div = 1
+            for a in fsdp_axes:
+                div *= _axis_size(self.mesh, a)
+            if div > 1 and len(shape) >= 2:
+                for cand in FSDP_AXES:
+                    placed = False
+                    for i, (ax, dim) in enumerate(zip(axes, shape)):
+                        if ax == cand and out[i] is None and dim % div == 0:
+                            out[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                            placed = True
+                            break
+                    if placed:
+                        break
+        return P(*out)
+
+    # ----------------- activations -----------------
+
+    def act_spec(self, axes: tuple, shape: tuple) -> P:
+        out: list = [None] * len(axes)
+        m = _axis_size(self.mesh, "model")
+        model_used = False
+        # pass 1: TP / cache-seq dims claim "model" first
+        for i, (ax, dim) in enumerate(zip(axes, shape)):
+            if model_used or m <= 1:
+                break
+            if ax in ("heads", "mlp", "expert") and (self.pcfg.tp > 1 or
+                                                     self.pcfg.ep > 1):
+                if dim % m == 0:
+                    out[i] = "model"
+                    model_used = True
+            elif ax == "kv_seq" and dim % m == 0:
+                # decode path: KV cache sharded along sequence over "model"
+                out[i] = "model"
+                model_used = True
+        # pass 2: batch + (SP) sequence
+        for i, (ax, dim) in enumerate(zip(axes, shape)):
+            if out[i] is not None:
+                continue
+            if ax == "batch":
+                baxes = [a for a in self.pcfg.batch_axes
+                         if _axis_size(self.mesh, a) > 1]
+                if "model" in baxes and model_used:
+                    baxes = [a for a in baxes if a != "model"]
+                div = 1
+                for a in baxes:
+                    div *= _axis_size(self.mesh, a)
+                if baxes and dim % div == 0:
+                    out[i] = tuple(baxes) if len(baxes) > 1 else baxes[0]
+            elif (ax == "seq" and self.pcfg.seq_shard and not model_used
+                  and m > 1 and dim % m == 0):
+                out[i] = "model"
+                model_used = True
+        return P(*out)
+
+
+# --------------------------------------------------------------------------
+# Ambient resolver: model code calls shard_act(x, "batch","seq","embed") and
+# it becomes a with_sharding_constraint under a mesh, a no-op otherwise.
+# --------------------------------------------------------------------------
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def use_resolver(resolver: Resolver | None):
+    prev = getattr(_TLS, "resolver", None)
+    _TLS.resolver = resolver
+    try:
+        yield
+    finally:
+        _TLS.resolver = prev
+
+
+def current_resolver() -> Resolver | None:
+    return getattr(_TLS, "resolver", None)
+
+
+def shard_act(x, *axes: str):
+    r = current_resolver()
+    if r is None:
+        return x
+    spec = r.act_spec(tuple(axes), x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(r.mesh, spec))

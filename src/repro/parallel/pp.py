@@ -1,0 +1,107 @@
+"""Pipeline parallelism (HaiScale PP, paper §V-B2) as a shard_map schedule.
+
+GPipe-style: layers are split into P contiguous stages sharded over a
+"pipe" mesh axis; microbatches flow stage-to-stage via ``collective_permute``
+(one ppermute per tick, m + P - 1 ticks).  The schedule is differentiable —
+``jax.grad`` through it yields the reverse pipeline automatically (ppermute
+transposes to the inverted permutation), so training works end-to-end.
+
+The paper's PCIe-specific trick — staggering the PP ranks of the 8 GPUs on
+a node across different DP ranks so they don't fight for the single NIC —
+maps onto TPU as *placing the pipe axis on the intra-pod fabric and the DP
+axis across pods*, which the mesh layout rules already enforce; the
+explicit time-staggering knob has no analogue when every chip has its own
+ICI links (documented in DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def split_stages(stacked_params, n_stages: int):
+    """(L, ...) stacked layer params -> (P, L/P, ...) for P("pipe") sharding."""
+    def re(x):
+        L = x.shape[0]
+        assert L % n_stages == 0, (L, n_stages)
+        return x.reshape(n_stages, L // n_stages, *x.shape[1:])
+    return jax.tree_util.tree_map(re, stacked_params)
+
+
+def pipeline_apply(stage_fn, stage_params, x_micro, *, axis: str = "pipe"):
+    """Run the GPipe schedule.  Call INSIDE shard_map.
+
+    stage_fn(stage_params, x) -> x      (applies this stage's layers)
+    stage_params: this rank's (1, L/P, ...) slice (leading dim squeezed here)
+    x_micro: (n_micro, mb, ...) microbatched input (stage 0 consumes it)
+
+    Returns (n_micro, mb, ...) outputs, valid on every rank (psum-broadcast
+    from the last stage).
+    """
+    P = lax.axis_size(axis)
+    rank = lax.axis_index(axis)
+    n_micro = x_micro.shape[0]
+    sp = jax.tree_util.tree_map(lambda a: a[0], stage_params)
+    perm = [(i, i + 1) for i in range(P - 1)]
+
+    recv = jnp.zeros(x_micro.shape[1:], x_micro.dtype)
+    outputs = jnp.zeros_like(x_micro)
+    for t in range(n_micro + P - 1):
+        mb_idx = t - rank
+        mb_c = jnp.clip(mb_idx, 0, n_micro - 1)
+        first_in = x_micro[mb_c]
+        inp = jnp.where(rank == 0, first_in, recv)
+        out = stage_fn(sp, inp)
+        active = jnp.logical_and(mb_idx >= 0, mb_idx < n_micro)
+        out = jnp.where(active, out, jnp.zeros_like(out))
+        collect = jnp.logical_and(rank == P - 1, active)
+        outputs = jnp.where(collect, outputs.at[mb_c].set(out), outputs)
+        if perm:
+            recv = lax.ppermute(out, axis, perm)
+    # only the last stage holds real outputs -> broadcast to all ranks
+    outputs = jnp.where(rank == P - 1, outputs, jnp.zeros_like(outputs))
+    return lax.psum(outputs, axis)
+
+
+def make_pipelined_forward(layer_fn, n_stages: int, n_micro: int, mesh,
+                           *, axis="pipe"):
+    """Build f(stacked_params, x) -> y running layers as a P-stage pipeline.
+
+    layer_fn(layer_params, x) -> x;  stacked_params: (L, ...) trees;
+    x: (batch, ...) with batch % n_micro == 0.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as Pspec
+
+    def stage_fn(sp, x):
+        def body(carry, lp):
+            return layer_fn(lp, carry), None
+        x, _ = lax.scan(body, x, sp)
+        return x
+
+    def inner(staged_params, x_micro):
+        return pipeline_apply(stage_fn, staged_params, x_micro, axis=axis)
+
+    sharded = shard_map(
+        inner, mesh=mesh,
+        in_specs=(Pspec(axis), Pspec()),
+        out_specs=Pspec(),
+        check_rep=False)
+
+    def f(stacked_params, x):
+        b = x.shape[0]
+        assert b % n_micro == 0
+        xm = x.reshape(n_micro, b // n_micro, *x.shape[1:])
+        staged = split_stages(stacked_params, n_stages)
+        ym = sharded(staged, xm)
+        return ym.reshape(b, *x.shape[1:])
+
+    return f
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    """GPipe bubble: (P-1)/(m+P-1) — the Fig. 9 scaling term."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)

@@ -1,0 +1,89 @@
+"""Per-(arch x shape) parallelism profiles — the HaiScale layout table.
+
+``make_parallel_config`` picks the Fire-Flyer-rule layout for a given model,
+input shape and mesh; divisibility is checked so one rule set serves all 10
+assigned architectures (DESIGN.md §4/§5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+
+# Archs large enough that TP+SP+FSDP is mandatory at 512 chips.
+TP_ARCHS = {"llama3-405b", "internvl2-76b", "nemotron-4-15b",
+            "qwen3-moe-235b-a22b"}
+
+# Gradient-accumulation factor for the big-arch train shapes (keeps
+# per-microbatch boundary activations ~<=1 GiB/chip, see DESIGN.md §4).
+TRAIN_MICROBATCH = {
+    "llama3-405b": 8,
+    "internvl2-76b": 4,
+    "qwen3-moe-235b-a22b": 2,
+    "nemotron-4-15b": 1,
+}
+
+
+def _axes_product(mesh_shape, axes) -> int:
+    out = 1
+    for a in axes:
+        out *= mesh_shape.get(a, 1)
+    return out
+
+
+def choose_batch_axes(global_batch: int, mesh_shape: dict,
+                      candidates) -> tuple:
+    for combo in candidates:
+        axes = tuple(a for a in combo if mesh_shape.get(a, 1) > 1)
+        prod = _axes_product(mesh_shape, axes)
+        if prod >= 1 and global_batch % prod == 0:
+            return axes
+    return ()
+
+
+def make_parallel_config(cfg: ModelConfig, shape: ShapeConfig,
+                         mesh_shape: dict,
+                         overrides: dict | None = None) -> ParallelConfig:
+    model_ax = mesh_shape.get("model", 1)
+    is_tp = cfg.name in TP_ARCHS and model_ax > 1
+    is_moe = cfg.moe is not None
+    ep = model_ax if (is_moe and cfg.moe.n_experts % model_ax == 0) else 1
+
+    if shape.kind == "train":
+        if is_tp:
+            batch_axes = choose_batch_axes(
+                shape.global_batch, mesh_shape,
+                [("pod", "data"), ("data",), ("pod",), ()])
+            pc = ParallelConfig(
+                tp=model_ax, fsdp=True, zero1_pod=True,
+                batch_axes=batch_axes, seq_shard=True,
+                microbatch=TRAIN_MICROBATCH.get(cfg.name, 1),
+                remat="full", ep=ep)
+        else:
+            # small/medium: pure DP across ("data","model"), pod = DP replica
+            batch_axes = choose_batch_axes(
+                shape.global_batch, mesh_shape,
+                [("pod", "data", "model"), ("data", "model"),
+                 ("pod", "data"), ("data",), ()])
+            # ZeRO-1 only over axes that carry batch: sharding the optimizer
+            # over an idle axis makes GSPMD partition the backward per layer
+            # over it (21.5 GB/chip cross-pod measured — §Perf zamba)
+            pc = ParallelConfig(
+                tp=1, fsdp=True,
+                zero1_pod="pod" in batch_axes,
+                opt_shard_model="model" in batch_axes,
+                batch_axes=batch_axes,
+                seq_shard=False, microbatch=1, remat="full", ep=ep)
+    else:
+        # serving (prefill / decode): params stay TP+FSDP-sharded for big
+        # archs; batch over ("pod","data"); KV-cache seq dim over "model".
+        batch_axes = choose_batch_axes(
+            shape.global_batch, mesh_shape,
+            [("pod", "data"), ("data",), ("pod",), ()])
+        pc = ParallelConfig(
+            tp=model_ax if is_tp else 1, fsdp=True, zero1_pod=False,
+            batch_axes=batch_axes, seq_shard=is_tp and shape.kind == "prefill",
+            microbatch=1, remat="none", ep=ep)
+    if overrides:
+        pc = dataclasses.replace(pc, **overrides)
+    return pc

@@ -1,0 +1,121 @@
+"""Fault-tolerant training runner: the HAI-platform task lifecycle
+(paper §VI-C + §VII) wrapped around a JAX train loop.
+
+  interrupt/failure -> (validator isolates node) -> restore last checkpoint
+  -> optionally *elastic* re-mesh on fewer nodes -> continue.
+
+Also straggler mitigation: per-step wall times are tracked with a rolling
+median; a step slower than ``straggler_factor`` x median raises a
+straggler event — the platform's answer is to swap the node (simulated by
+the caller's injector) and keep going, never to silently stall the gang.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.platform.failures import SimulatedHardwareFailure
+
+
+@dataclasses.dataclass
+class RunReport:
+    steps_done: int = 0
+    failures: int = 0
+    restores: int = 0
+    rescales: int = 0
+    stragglers: int = 0
+    lost_steps: int = 0
+    step_times: list = dataclasses.field(default_factory=list)
+    events: list = dataclasses.field(default_factory=list)
+
+
+class FTRunner:
+    """
+    make_step(world_size) -> step_fn(state, batch) -> (state, metrics)
+      (re-built on elastic rescale; world_size is a logical node count)
+    fetch_batch(step) -> batch
+    ckpt_manager: repro.ckpt.CheckpointManager
+    injector: optional FailureInjector (check(step) raises)
+    """
+
+    def __init__(self, make_step, fetch_batch, ckpt_manager, state,
+                 *, world_size: int, min_world: int = 1,
+                 ckpt_every: int = 10, injector=None,
+                 straggler_factor: float = 4.0,
+                 on_event: Optional[Callable] = None):
+        self.make_step = make_step
+        self.fetch_batch = fetch_batch
+        self.ckpt = ckpt_manager
+        self.state = state
+        self.world = world_size
+        self.min_world = min_world
+        self.ckpt_every = ckpt_every
+        self.injector = injector
+        self.straggler_factor = straggler_factor
+        self.on_event = on_event or (lambda *a: None)
+
+    def _log(self, report, kind, **kw):
+        report.events.append({"kind": kind, **kw})
+        self.on_event(kind, kw)
+
+    def run(self, total_steps: int, start_step: int = 0) -> RunReport:
+        report = RunReport()
+        step_fn = self.make_step(self.world)
+        step = start_step
+        last_ckpt_step = start_step
+        self.ckpt.save(self.state, step, blocking=True)
+
+        while step < total_steps:
+            try:
+                if self.injector is not None:
+                    self.injector.check(step)
+                batch = self.fetch_batch(step)
+                t0 = time.perf_counter()
+                self.state, metrics = step_fn(self.state, batch)
+                _block(metrics)
+                dt = time.perf_counter() - t0
+                report.step_times.append(dt)
+                # --- straggler detection ---
+                hist = report.step_times[-20:]
+                if len(hist) >= 5:
+                    med = float(np.median(hist[:-1]))
+                    if dt > self.straggler_factor * med:
+                        report.stragglers += 1
+                        self._log(report, "straggler", step=step,
+                                  dt=dt, median=med)
+                step += 1
+                report.steps_done += 1
+                if self.ckpt_every and step % self.ckpt_every == 0:
+                    self.ckpt.save(self.state, step, blocking=False)
+                    last_ckpt_step = step
+            except SimulatedHardwareFailure as e:
+                report.failures += 1
+                self._log(report, "failure", step=step, cls=e.cls,
+                          action=e.action, fatal=e.fatal)
+                # disaster recovery: restore last checkpoint
+                self.ckpt.wait()
+                restored = self.ckpt.restore_latest(self.state)
+                if restored is None:
+                    raise
+                self.state, ckstep = restored
+                report.lost_steps += max(step - ckstep, 0)
+                report.restores += 1
+                step = ckstep
+                # elastic: fatal failure removes a node; shrink the gang
+                if e.fatal and self.world > self.min_world:
+                    self.world -= 1
+                    report.rescales += 1
+                    self._log(report, "rescale", new_world=self.world)
+                step_fn = self.make_step(self.world)
+
+        self.ckpt.wait()
+        self.ckpt.save(self.state, step, blocking=True)
+        return report
+
+
+def _block(tree):
+    import jax
+    jax.block_until_ready(tree)

@@ -1,0 +1,173 @@
+"""HAI-platform time-sharing scheduler (paper §VI-C, §III-B).
+
+Semantics reproduced:
+  * cluster nodes are classified (zone, type), NOT pooled;
+  * tasks are gang-scheduled whole-node allocations; higher-priority tasks
+    interrupt lower ones (interrupt -> task checkpoints -> requeue);
+  * **cross-zone rule**: at most ONE running task may span both fat-tree
+    zones (the paper's guarantee that only one pair of nodes communicates
+    across the inter-zone links);
+  * failed nodes (validator / failure model) leave the schedulable pool;
+  * utilization accounting (the paper reports 99 % with time-sharing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Optional
+
+
+@dataclasses.dataclass
+class Task:
+    task_id: int
+    n_nodes: int
+    priority: int              # higher preempts lower
+    runtime_hours: float
+    remaining_hours: float = -1.0
+    zone_pref: Optional[int] = None
+    # bookkeeping
+    nodes: tuple = ()
+    state: str = "queued"      # queued | running | done | interrupted
+    interruptions: int = 0
+    cross_zone: bool = False
+
+    def __post_init__(self):
+        if self.remaining_hours < 0:
+            self.remaining_hours = self.runtime_hours
+
+
+class Cluster:
+    def __init__(self, n_nodes: int = 16, zones: int = 2):
+        self.zones = zones
+        self.nodes = {i: {"zone": i % zones, "healthy": True, "task": None}
+                      for i in range(n_nodes)}
+
+    def free_nodes(self, zone: Optional[int] = None) -> list[int]:
+        return [i for i, n in self.nodes.items()
+                if n["healthy"] and n["task"] is None
+                and (zone is None or n["zone"] == zone)]
+
+    def mark_failed(self, node: int):
+        self.nodes[node]["healthy"] = False
+
+    def repair(self, node: int):
+        self.nodes[node]["healthy"] = True
+
+
+class Scheduler:
+    def __init__(self, cluster: Cluster):
+        self.cluster = cluster
+        self._queue: list = []     # (-priority, seq, Task)
+        self._seq = itertools.count()
+        self.running: dict[int, Task] = {}
+        self.done: list[Task] = []
+        self.time = 0.0
+        self._busy_node_hours = 0.0
+        self._cap_node_hours = 0.0
+
+    # ------------- queue ops -------------
+
+    def submit(self, task: Task):
+        task.state = "queued"
+        heapq.heappush(self._queue, (-task.priority, next(self._seq), task))
+
+    def _cross_zone_running(self) -> bool:
+        return any(t.cross_zone for t in self.running.values())
+
+    def _try_place(self, task: Task) -> bool:
+        # try single-zone placement first (cheapest for the fabric)
+        for z in range(self.cluster.zones):
+            free = self.cluster.free_nodes(z)
+            if task.zone_pref is not None and z != task.zone_pref:
+                continue
+            if len(free) >= task.n_nodes:
+                self._start(task, free[: task.n_nodes], cross=False)
+                return True
+        # cross-zone: allowed only if no other cross-zone task runs
+        free = self.cluster.free_nodes()
+        if len(free) >= task.n_nodes and not self._cross_zone_running() \
+                and task.zone_pref is None:
+            self._start(task, free[: task.n_nodes], cross=True)
+            return True
+        return False
+
+    def _start(self, task: Task, nodes: list[int], cross: bool):
+        task.nodes = tuple(nodes)
+        task.state = "running"
+        task.cross_zone = cross
+        for n in nodes:
+            self.cluster.nodes[n]["task"] = task.task_id
+        self.running[task.task_id] = task
+
+    def _stop(self, task: Task, state: str):
+        for n in task.nodes:
+            if self.cluster.nodes[n]["task"] == task.task_id:
+                self.cluster.nodes[n]["task"] = None
+        task.nodes = ()
+        task.state = state
+        self.running.pop(task.task_id, None)
+
+    def interrupt(self, task_id: int):
+        """Platform signal: checkpoint + requeue (paper's task lifecycle)."""
+        task = self.running.get(task_id)
+        if task is None:
+            return
+        task.interruptions += 1
+        self._stop(task, "interrupted")
+        self.submit(task)
+
+    def _maybe_preempt_for(self, task: Task):
+        """Interrupt enough lowest-priority tasks to fit `task`."""
+        victims = sorted(self.running.values(), key=lambda t: t.priority)
+        freed = len(self.cluster.free_nodes())
+        for v in victims:
+            if freed >= task.n_nodes:
+                break
+            if v.priority < task.priority:
+                freed += v.n_nodes
+                self.interrupt(v.task_id)
+
+    def schedule(self):
+        """Place as many queued tasks as possible (priority order)."""
+        requeue = []
+        while self._queue:
+            _, _, task = heapq.heappop(self._queue)
+            if task.state == "done":
+                continue
+            if not self._try_place(task):
+                self._maybe_preempt_for(task)
+                if not self._try_place(task):
+                    requeue.append(task)
+                    # strict priority: don't let lower-priority jump ahead
+                    break
+        for t in requeue:
+            heapq.heappush(self._queue, (-t.priority, next(self._seq), t))
+        while self._queue and self._queue[0][2].state == "done":
+            heapq.heappop(self._queue)
+
+    # ------------- time & failures -------------
+
+    def advance(self, hours: float):
+        """Run `hours` of cluster time."""
+        self.schedule()
+        healthy = sum(n["healthy"] for n in self.cluster.nodes.values())
+        self._cap_node_hours += healthy * hours
+        for task in list(self.running.values()):
+            task.remaining_hours -= hours
+            self._busy_node_hours += task.n_nodes * hours
+            if task.remaining_hours <= 1e-9:
+                self._stop(task, "done")
+                self.done.append(task)
+        self.time += hours
+        self.schedule()
+
+    def node_failure(self, node: int):
+        """Failure-model hook: fail node, interrupt the task on it."""
+        tid = self.cluster.nodes[node]["task"]
+        self.cluster.mark_failed(node)
+        if tid is not None:
+            self.interrupt(tid)
+
+    def utilization(self) -> float:
+        return self._busy_node_hours / max(self._cap_node_hours, 1e-9)

@@ -1,0 +1,272 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+# ^ must precede any jax import: collective tests need >1 (fake) device.
+"""Multi-device numerics checks, run as a subprocess from pytest so the
+main test process keeps its single-device jax. Prints one JSON report."""
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def _mesh():
+    return jax.make_mesh((2, 4), ("pod", "data"))
+
+
+def check_hfreduce():
+    from repro.core.hfreduce import hfreduce, flat_allreduce
+    mesh = _mesh()
+    x = jnp.arange(8 * 1000, dtype=jnp.float32).reshape(8, 1000) / 100.0
+
+    def f(v):
+        return hfreduce(v[0], strong_axis="data", weak_axis="pod")
+
+    def g(v):
+        return flat_allreduce(v[0], axes=("pod", "data"))
+
+    spec = P(("pod", "data"))
+    out_h = shard_map(f, mesh=mesh, in_specs=spec, out_specs=P(),
+                      check_rep=False)(x)
+    out_f = shard_map(g, mesh=mesh, in_specs=spec, out_specs=P(),
+                      check_rep=False)(x)
+    ref = jnp.sum(x, axis=0)
+    return (float(jnp.max(jnp.abs(out_h - ref))),
+            float(jnp.max(jnp.abs(out_f - ref))))
+
+
+def check_tree_allreduce():
+    from repro.core.tree_allreduce import tree_allreduce, ring_allreduce
+    mesh = jax.make_mesh((8,), ("n",))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 257)),
+                    jnp.float32)
+
+    def t(v):
+        return tree_allreduce(v[0], "n")
+
+    def r(v):
+        return ring_allreduce(v[0], "n")
+
+    ref = jnp.sum(x, axis=0)
+    out_t = shard_map(t, mesh=mesh, in_specs=P("n"), out_specs=P(),
+                      check_rep=False)(x)
+    out_r = shard_map(r, mesh=mesh, in_specs=P("n"), out_specs=P(),
+                      check_rep=False)(x)
+    return (float(jnp.max(jnp.abs(out_t - ref))),
+            float(jnp.max(jnp.abs(out_r - ref))))
+
+
+def check_compressed_psum():
+    from repro.core.compression import bf16_psum, int8_psum
+    mesh = jax.make_mesh((8,), ("n",))
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((8, 4096)), jnp.float32)
+    ref = np.asarray(jnp.sum(x, axis=0))
+
+    def fb(v):
+        return bf16_psum(v[0], "n")
+
+    def fi(v):
+        return int8_psum(v[0], "n")
+
+    out_b = np.asarray(shard_map(fb, mesh=mesh, in_specs=P("n"),
+                                 out_specs=P(), check_rep=False)(x))
+    out_i = np.asarray(shard_map(fi, mesh=mesh, in_specs=P("n"),
+                                 out_specs=P(), check_rep=False)(x))
+    scale = np.abs(ref).max() + 1e-9
+    return (float(np.max(np.abs(out_b - ref)) / scale),
+            float(np.max(np.abs(out_i - ref)) / scale))
+
+
+def check_hfreduce_tree_combo():
+    from repro.core.hfreduce import hfreduce_tree
+    mesh = _mesh()
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((8, 333)),
+                    jnp.float32)
+
+    def f(v):
+        return hfreduce_tree(v[0], strong_axis="data", weak_axis="pod")
+
+    out = shard_map(f, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(),
+                    check_rep=False)(x)
+    ref = jnp.sum(x, axis=0)
+    return float(jnp.max(jnp.abs(out - ref)))
+
+
+def check_ddp_step():
+    """DDP shard_map step == single-device step on the same global batch."""
+    import dataclasses as dc
+    from repro.configs.registry import smoke_config
+    from repro.configs.base import ParallelConfig
+    from repro.models import build_model
+    from repro.optim import AdamW
+    from repro.core.ddp import make_ddp_train_step
+    from repro.data.synthetic import batch_for_model
+
+    cfg = dc.replace(smoke_config("phi4-mini-3.8b"), n_layers=2,
+                     compute_dtype="float32")
+    model = build_model(cfg)
+    opt = AdamW(lr=1e-2, param_dtype="float32")
+    params = model.init(jax.random.PRNGKey(0))
+    state = opt.init(params)
+    mesh = _mesh()
+    step, _ = make_ddp_train_step(
+        lambda p, b: model.loss(p, b), opt, mesh,
+        batch_axes=("pod", "data"), params_template=params)
+    batch = {k: jnp.asarray(v)
+             for k, v in batch_for_model(cfg, "train", 0, 8, 32).items()}
+    new_state, metrics = step(state, batch)
+
+    # reference: plain single-device full-batch step
+    import repro.train_lib as tl
+    pcfg = ParallelConfig(tp=1, fsdp=False, batch_axes=())
+    ref_step = jax.jit(tl.make_train_step(model, opt, pcfg, mesh))
+    ref_state, ref_metrics = ref_step(state, batch)
+    dl = jax.tree_util.tree_leaves(new_state["master"])
+    rl = jax.tree_util.tree_leaves(ref_state["master"])
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(dl, rl))
+    return err, float(metrics["loss"]), float(ref_metrics["loss"])
+
+
+def check_ddp_compressed():
+    """int8-compressed hierarchical DDP still trains (bounded grad error)."""
+    import dataclasses as dc
+    from repro.configs.registry import smoke_config
+    from repro.models import build_model
+    from repro.optim import AdamW
+    from repro.core.ddp import make_ddp_train_step
+    from repro.data.synthetic import batch_for_model
+
+    cfg = dc.replace(smoke_config("xlstm-125m"), block_pattern="ms",
+                     n_layers=2, compute_dtype="float32")
+    model = build_model(cfg)
+    opt = AdamW(lr=1e-2, param_dtype="float32")
+    state = opt.init(model.init(jax.random.PRNGKey(0)))
+    mesh = _mesh()
+    step, _ = make_ddp_train_step(
+        lambda p, b: model.loss(p, b), opt, mesh,
+        batch_axes=("pod", "data"), compress="int8",
+        params_template=state["params"])
+    losses = []
+    for i in range(3):
+        batch = {k: jnp.asarray(v)
+                 for k, v in batch_for_model(cfg, "train", i, 8, 32).items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    return losses
+
+
+def check_pipeline():
+    """4-stage GPipe == sequential layers; grads flow through ppermute."""
+    from repro.parallel.pp import make_pipelined_forward
+    rng = np.random.default_rng(3)
+    L, d, b, m = 8, 16, 8, 4
+    W = jnp.asarray(rng.standard_normal((L, d, d)) * 0.3, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+
+    def layer_fn(w, h):
+        return jnp.tanh(h @ w)
+
+    mesh = jax.make_mesh((4, 2), ("pipe", "dp"))
+    pp = make_pipelined_forward(layer_fn, n_stages=4, n_micro=m, mesh=mesh)
+    y_pp = pp(W, x)
+    y_seq = x
+    for i in range(L):
+        y_seq = layer_fn(W[i], y_seq)
+    fwd_err = float(jnp.max(jnp.abs(y_pp - y_seq)))
+
+    def loss_pp(w):
+        return jnp.sum(pp(w, x) ** 2)
+
+    def loss_seq(w):
+        h = x
+        for i in range(L):
+            h = layer_fn(w[i], h)
+        return jnp.sum(h ** 2)
+
+    g_pp = jax.grad(loss_pp)(W)
+    g_seq = jax.grad(loss_seq)(W)
+    grad_err = float(jnp.max(jnp.abs(g_pp - g_seq)))
+    return fwd_err, grad_err
+
+
+def check_elastic_remesh():
+    """Checkpoint saved on an 8-device mesh restores and continues on a
+    4-device mesh (elastic shrink) with bit-identical training math."""
+    import dataclasses as dc
+    import tempfile
+    from repro.configs.base import ParallelConfig
+    from repro.configs.registry import smoke_config
+    from repro.models import build_model
+    from repro.optim import AdamW
+    from repro.ckpt import CheckpointManager
+    from repro.data.synthetic import batch_for_model
+    from repro import train_lib
+
+    cfg = dc.replace(smoke_config("phi4-mini-3.8b"), n_layers=2,
+                     compute_dtype="float32")
+    model = build_model(cfg)
+    opt = AdamW(lr=1e-3, param_dtype="float32")
+
+    def fetch(i):
+        return {k: jnp.asarray(v) for k, v in
+                batch_for_model(cfg, "train", i, 8, 32).items()}
+
+    def run_steps(mesh, state, lo, hi):
+        pcfg = ParallelConfig(tp=1, fsdp=True, zero1_pod=False,
+                              batch_axes=("data",))
+        # explicit placement: an elastic runner re-shards the restored
+        # state onto the new (smaller) mesh before continuing
+        sspec = train_lib.state_pspecs(model, pcfg, mesh)
+        state = jax.device_put(state, train_lib.to_named(sspec, mesh))
+        step = jax.jit(train_lib.make_train_step(model, opt, pcfg, mesh))
+        for i in range(lo, hi):
+            state, _ = step(state, fetch(i))
+        return state
+
+    state0 = opt.init(model.init(jax.random.PRNGKey(0)))
+    mesh8 = jax.make_mesh((8, 1), ("data", "model"))
+    mesh4 = jax.sharding.Mesh(
+        np.array(jax.devices()[:4]).reshape(4, 1), ("data", "model"))
+
+    # unbroken 6-step reference on the large mesh
+    ref = run_steps(mesh8, jax.tree_util.tree_map(jnp.copy, state0), 0, 6)
+
+    # elastic: 3 steps on 8 devices -> save -> restore -> 3 more on 4
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        st = run_steps(mesh8, jax.tree_util.tree_map(jnp.copy, state0), 0, 3)
+        mgr.save(st, 3, blocking=True)
+        st2, start = mgr.restore_latest(state0)
+        st2 = run_steps(mesh4, st2, start, 6)
+
+    # pull both to host: ref lives on the 8-dev mesh, st2 on the 4-dev one
+    ref_h = jax.device_get(ref["master"])
+    st2_h = jax.device_get(st2["master"])
+    err = max(float(np.max(np.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(ref_h),
+        jax.tree_util.tree_leaves(st2_h)))
+    return err
+
+
+def main():
+    out = {}
+    out["hfreduce_err"], out["flat_err"] = check_hfreduce()
+    out["tree_err"], out["ring_err"] = check_tree_allreduce()
+    out["bf16_psum_relerr"], out["int8_psum_relerr"] = check_compressed_psum()
+    out["hfreduce_tree_err"] = check_hfreduce_tree_combo()
+    (out["ddp_vs_ref_err"], out["ddp_loss"],
+     out["ref_loss"]) = check_ddp_step()
+    out["ddp_int8_losses"] = check_ddp_compressed()
+    out["pp_fwd_err"], out["pp_grad_err"] = check_pipeline()
+    out["elastic_remesh_err"] = check_elastic_remesh()
+    out["n_devices"] = len(jax.devices())
+    print("MULTIDEV_JSON:" + json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""GSPMD train / serve step builders (the big-model path).
+
+The sharding rules in `parallel/` make XLA emit the Fire-Flyer collective
+schedule (DESIGN.md §4): FSDP all-gathers stay intra-pod, gradients cross
+the pod axis once per step as 1/16-size shards, the optimizer updates
+pod-sharded fp32 masters (ZeRO-1) and all-gathers bf16 params over "pod"
+once.  ``launch/dryrun.py`` lowers these steps for every (arch x shape).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models.params import shape_tree, spec_tree
+from repro.parallel.axes import Resolver, use_resolver
+
+
+# ----------------------------- spec plumbing -------------------------------
+
+
+def batch_pspecs(specs_tree, resolver: Resolver):
+    """Assign PartitionSpecs to data-batch leaves by rank."""
+    def one(sds):
+        rank = len(sds.shape)
+        axes = [("batch",), ("batch", "seq"), ("batch", "seq", "_")][
+            min(rank, 3) - 1] if rank else ()
+        return resolver.act_spec(tuple(axes), sds.shape)
+    return jax.tree_util.tree_map(one, specs_tree)
+
+
+def cache_pspecs(model, shape: ShapeConfig, resolver: Resolver):
+    specs = model.cache_specs(shape)
+    axes = model.cache_axes(shape)
+
+    def one(sds, ax):
+        return resolver.act_spec(tuple(ax), sds.shape)
+    return jax.tree_util.tree_map(
+        one, specs, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_pspecs(model, pcfg: ParallelConfig, mesh):
+    """PartitionSpec tree for the optimizer TrainState."""
+    defs = model.param_defs()
+    res = Resolver(mesh, pcfg)
+    extra = (("pod",) if pcfg.zero1_pod else ()) + \
+        (("model",) if pcfg.opt_shard_model else ())
+    res_opt = Resolver(mesh, pcfg, extra_fsdp_axes=extra)
+    pspec = spec_tree(defs, res.param_spec)
+    ospec = spec_tree(defs, res_opt.param_spec)
+    return {"params": pspec, "master": ospec, "m": ospec, "v": ospec,
+            "step": P()}
+
+
+def param_pspecs(model, pcfg: ParallelConfig, mesh):
+    defs = model.param_defs()
+    res = Resolver(mesh, pcfg)
+    return spec_tree(defs, res.param_spec)
+
+
+# ------------------------------ train step ---------------------------------
+
+
+def make_train_step(model, optimizer, pcfg: ParallelConfig, mesh):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    resolver = Resolver(mesh, pcfg)
+    sspec = state_pspecs(model, pcfg, mesh)
+    master_named = to_named(sspec["master"], mesh)
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    def train_step(state, batch):
+        with use_resolver(resolver):
+            M = pcfg.microbatch
+            params = state["params"]
+            if M > 1:
+                baxes = tuple(a for a in pcfg.batch_axes if a in mesh.shape)
+                mb_spec = lambda x: NamedSharding(
+                    mesh, P(None, baxes if len(baxes) > 1 else
+                            (baxes[0] if baxes else None)))
+                mb_batch = jax.tree_util.tree_map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x.reshape(M, x.shape[0] // M, *x.shape[1:]),
+                        mb_spec(x)),
+                    batch)
+
+                def acc(carry, mb):
+                    gsum, lsum = carry
+                    (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, mb)
+                    # keep the fp32 accumulator on the optimizer sharding
+                    # (pod-sharded, ZeRO-1) so the scan carry stays 1/pods
+                    gsum = jax.tree_util.tree_map(
+                        lambda a, b, s: jax.lax.with_sharding_constraint(
+                            a + b.astype(jnp.float32), s),
+                        gsum, g, master_named)
+                    return (gsum, lsum + l), None
+
+                g0 = jax.tree_util.tree_map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), params)
+                (gsum, lsum), _ = jax.lax.scan(
+                    acc, (g0, jnp.zeros((), jnp.float32)), mb_batch)
+                grads = jax.tree_util.tree_map(lambda g: g / M, gsum)
+                loss = lsum / M
+                metrics = {"loss": loss}
+            else:
+                (loss, mets), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g.astype(jnp.float32), grads)
+                metrics = {"loss": loss, **mets}
+            # grads follow the *params* sharding after autodiff (psum over
+            # batch axes inserted automatically).  Re-constrain to the
+            # optimizer sharding: over "pod" this is a local slice (ZeRO-1).
+            # NOTE: sharding the optimizer over an axis that carries no
+            # batch data makes GSPMD partition the backward per layer over
+            # that axis (measured: 21.5 GB/chip cross-pod for zamba;
+            # optimization_barrier does NOT stop the propagation —
+            # EXPERIMENTS.md §Perf iterations 1/5).  parallel/spec.py
+            # therefore only adds "pod" to the optimizer sharding when
+            # "pod" carries batch, and uses "model" otherwise.
+            grads = jax.tree_util.tree_map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, master_named)
+            new_state = optimizer.apply(state, grads)
+        return new_state, metrics
+
+    return train_step
+
+
+# ------------------------------ serve steps --------------------------------
+
+
+def make_serve_step(model, pcfg: ParallelConfig, mesh):
+    resolver = Resolver(mesh, pcfg)
+
+    def serve_step(params, cache, tokens):
+        with use_resolver(resolver):
+            return model.decode_step(params, cache, tokens)
+
+    return serve_step
+
+
+def make_prefill_step(model, pcfg: ParallelConfig, mesh):
+    resolver = Resolver(mesh, pcfg)
+
+    def prefill_step(params, batch):
+        with use_resolver(resolver):
+            return model.prefill(params, batch)
+
+    return prefill_step
+
+
+# --------------------------- abstract state --------------------------------
+
+
+def abstract_state(model, optimizer):
+    """ShapeDtypeStruct TrainState (no allocation) for AOT lowering."""
+    pshapes = model.param_shapes()
+    return optimizer.state_shapes(pshapes)
+
+
+def abstract_params(model, dtype="bfloat16"):
+    return model.param_shapes(dtype)

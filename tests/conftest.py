@@ -1,0 +1,6 @@
+# NOTE: deliberately NO XLA_FLAGS here — smoke tests and benches must see
+# 1 device. Multi-device numerics run in a subprocess (test_collectives).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

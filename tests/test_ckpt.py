@@ -1,0 +1,74 @@
+"""Checkpoint manager: chunked/indexed save-restore, async, periodic, GC."""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+
+
+@pytest.fixture()
+def state():
+    return {
+        "params": {"w": jnp.arange(256, dtype=jnp.bfloat16).reshape(16, 16),
+                   "b": jnp.ones((7,), jnp.float32)},
+        "m": [jnp.full((33,), 2.0, jnp.float32)],
+        "step": jnp.asarray(11, jnp.int32),
+    }
+
+
+def _zeros_like(state):
+    return jax.tree_util.tree_map(lambda x: jnp.zeros_like(x), state)
+
+
+def test_roundtrip_bf16(tmp_path, state):
+    mgr = CheckpointManager(str(tmp_path), chunk_bytes=128)
+    mgr.save(state, 11, blocking=True)
+    restored, step = mgr.restore_latest(_zeros_like(state))
+    assert step == 11
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        assert bool(jnp.all(a == b))
+
+
+def test_index_has_offsets(tmp_path, state):
+    mgr = CheckpointManager(str(tmp_path), chunk_bytes=128)
+    mgr.save(state, 1, blocking=True)
+    index = json.loads(open(tmp_path / "step_1" / "index.json").read())
+    assert len(index["chunks"]) > 1, "expected multiple chunks"
+    for rec in index["tensors"].values():
+        assert set(rec) >= {"chunk", "offset", "size", "shape", "dtype"}
+
+
+def test_async_save_and_wait(tmp_path, state):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(state, 5, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_gc_keeps_latest(tmp_path, state):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(state, s, blocking=True)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_3", "step_4"]
+
+
+def test_periodic_policy(tmp_path, state):
+    mgr = CheckpointManager(str(tmp_path), period_s=300.0)
+    t0 = 1000.0
+    assert mgr.maybe_save(state, 1, now=t0)           # first fires
+    assert not mgr.maybe_save(state, 2, now=t0 + 299)  # within window
+    assert mgr.maybe_save(state, 3, now=t0 + 301)      # past 5 minutes
+    mgr.wait()
+
+
+def test_restore_missing_returns_none(tmp_path, state):
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.restore_latest(_zeros_like(state)) is None

@@ -1,0 +1,96 @@
+"""HFReduce / tree / ring / compressed collectives + explicit DDP, verified
+numerically on 8 fake devices (subprocess keeps this process single-device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_RESULT = {}
+
+
+def _run_multidev():
+    global _RESULT
+    if _RESULT:
+        return _RESULT
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.testing.multidev"],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    for line in out.stdout.splitlines():
+        if line.startswith("MULTIDEV_JSON:"):
+            _RESULT = json.loads(line[len("MULTIDEV_JSON:"):])
+            return _RESULT
+    raise AssertionError("no MULTIDEV_JSON in output:\n" + out.stdout)
+
+
+def test_hfreduce_matches_flat_allreduce():
+    r = _run_multidev()
+    assert r["n_devices"] == 8
+    assert r["hfreduce_err"] < 1e-3
+    assert r["flat_err"] < 1e-3
+
+
+def test_double_binary_tree_and_ring():
+    r = _run_multidev()
+    assert r["tree_err"] < 1e-4, "double-binary-tree allreduce wrong"
+    assert r["ring_err"] < 1e-4, "ring allreduce wrong"
+    assert r["hfreduce_tree_err"] < 1e-4, "hfreduce+tree cross-pod wrong"
+
+
+def test_compressed_psum_error_bounds():
+    r = _run_multidev()
+    assert r["bf16_psum_relerr"] < 0.02
+    assert r["int8_psum_relerr"] < 0.05
+
+
+def test_ddp_step_matches_reference():
+    r = _run_multidev()
+    assert abs(r["ddp_loss"] - r["ref_loss"]) < 1e-3
+    assert r["ddp_vs_ref_err"] < 5e-3
+
+
+def test_ddp_int8_compression_trains():
+    r = _run_multidev()
+    losses = r["ddp_int8_losses"]
+    assert losses[-1] < losses[0] + 0.05  # not diverging
+
+
+def test_pipeline_parallel_matches_sequential():
+    r = _run_multidev()
+    assert r["pp_fwd_err"] < 1e-5, "GPipe forward != sequential"
+    assert r["pp_grad_err"] < 1e-4, "PP backward (ppermute transpose) wrong"
+
+
+def test_elastic_remesh_continuation():
+    """Save on 8 devices, restore+continue on 4 == unbroken run."""
+    r = _run_multidev()
+    assert r["elastic_remesh_err"] < 1e-5
+
+
+def test_tree_schedule_structure():
+    """Every rank sends to its parent exactly once; roots never send."""
+    from repro.core.tree_allreduce import tree_schedule
+    for n in (2, 3, 4, 5, 8, 16, 31):
+        for shift in (0, n // 2):
+            reduce_rounds, bcast_rounds = tree_schedule(n, shift)
+            senders = [s for rnd in reduce_rounds for s, _ in rnd]
+            assert len(senders) == n - 1, (n, shift)
+            assert len(set(senders)) == n - 1
+            receivers = [d for rnd in bcast_rounds for _, d in rnd]
+            assert sorted(receivers) == sorted(senders)
+            for rnd in reduce_rounds + bcast_rounds:
+                dsts = [d for _, d in rnd]
+                assert len(set(dsts)) == len(dsts), "dst collision in round"
+
+
+def test_crosspod_byte_model():
+    from repro.core.hfreduce import crosspod_bytes_flat, crosspod_bytes_hier
+    v = 1024 ** 3
+    flat = crosspod_bytes_flat(v, pods=2, intra=16)
+    hier = crosspod_bytes_hier(v, pods=2, intra=16)
+    assert hier * 15.9 < flat <= hier * 16.1  # the 1/16 weak-link claim

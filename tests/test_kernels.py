@@ -1,0 +1,114 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+# ------------------------------ flash attention ----------------------------
+
+FLASH_CASES = [
+    # b, h, kvh, sq, skv, d, causal
+    (2, 4, 2, 256, 256, 64, True),
+    (1, 8, 8, 128, 384, 128, False),
+    (2, 4, 1, 256, 512, 128, True),
+    (1, 2, 2, 128, 128, 32, True),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_flash_attention(case, dtype):
+    from repro.kernels.flash_attention import attention_ref, flash_attention
+    b, h, kvh, sq, skv, d, causal = case
+    q = _rand((b, h, sq, d), dtype)
+    k = _rand((b, kvh, skv, d), dtype)
+    v = _rand((b, kvh, skv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, impl="interpret")
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# --------------------------------- rmsnorm --------------------------------
+
+
+@pytest.mark.parametrize("shape", [(256, 128), (512, 384), (1024, 64)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_rmsnorm(shape, dtype):
+    from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+    x = _rand(shape, dtype)
+    w = _rand(shape[-1:], "float32")
+    out = rmsnorm(x, w, impl="interpret")
+    ref = rmsnorm_ref(x, w)
+    tol = 1e-5 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# -------------------------------- quant_comm ------------------------------
+
+
+@pytest.mark.parametrize("n", [256 * 4, 256 * 64, 256 * 129])
+def test_quant_roundtrip(n):
+    from repro.kernels.quant_comm import (dequantize, dequantize_ref,
+                                          quantize, quantize_ref)
+    x = _rand((n,), "float32")
+    q, s = quantize(x, impl="interpret")
+    qr, sr = quantize_ref(x)
+    assert bool(jnp.all(q == qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    d = dequantize(q, s, impl="interpret")
+    np.testing.assert_allclose(np.asarray(d),
+                               np.asarray(dequantize_ref(qr, sr)), rtol=1e-6)
+    # quantization error bound: per-block absmax / 127 / 2 (+rounding)
+    err = np.abs(np.asarray(d) - np.asarray(x))
+    bound = np.abs(np.asarray(x)).reshape(-1, 256).max(1) / 127.0
+    assert (err.reshape(-1, 256).max(1) <= bound * 0.5001 + 1e-7).all()
+
+
+# -------------------------------- topk gating -----------------------------
+
+
+@pytest.mark.parametrize("T,E,k", [(512, 64, 8), (1024, 128, 8), (512, 60, 4)])
+def test_topk_gating(T, E, k):
+    from repro.kernels.topk_gating import topk_gating, topk_gating_ref
+    logits = _rand((T, E), "float32")
+    w, i = topk_gating(logits, k, impl="interpret")
+    wr, ir = topk_gating_ref(logits, k)
+    assert bool(jnp.all(i == ir))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(wr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w).sum(1), 1.0, atol=1e-5)
+
+
+# --------------------------------- ssd scan -------------------------------
+
+
+@pytest.mark.parametrize("case", [
+    (2, 256, 4, 32, 16, 64),
+    (1, 512, 8, 64, 64, 128),
+    (2, 128, 2, 16, 8, 128),
+])
+def test_ssd_scan(case):
+    from repro.kernels.ssd_scan import ssd_quadratic_ref, ssd_ref, ssd_scan
+    b, l, h, p, n, chunk = case
+    x = _rand((b, l, h, p), "float32") * 0.5
+    a = -jnp.abs(_rand((b, l, h), "float32")) * 0.3
+    B = _rand((b, l, n), "float32") * 0.5
+    C = _rand((b, l, n), "float32") * 0.5
+    yk, hk = ssd_scan(x, a, B, C, chunk=chunk, impl="interpret")
+    yr, hr = ssd_ref(x, a, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), atol=1e-5)
+    yq = ssd_quadratic_ref(x, a, B, C)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yq), atol=1e-3)

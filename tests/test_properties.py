@@ -1,0 +1,154 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# ---------------- quantizer: bounded error, idempotent scales --------------
+
+
+@SET
+@given(st.integers(1, 16), st.floats(0.01, 100.0), st.integers(0, 2 ** 31))
+def test_quantize_error_bound(nblocks, scale, seed):
+    from repro.core.compression import (dequantize_blockwise,
+                                        quantize_blockwise, BLOCK)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(nblocks * BLOCK) * scale, jnp.float32)
+    q, s = quantize_blockwise(x)
+    back = dequantize_blockwise(q, s)
+    err = np.abs(np.asarray(back) - np.asarray(x)).reshape(nblocks, BLOCK)
+    bound = np.abs(np.asarray(x)).reshape(nblocks, BLOCK).max(1) / 127.0
+    assert (err.max(1) <= bound * 0.5001 + 1e-7).all()
+
+
+# ---------------- error feedback: compounding error stays bounded ----------
+
+
+@SET
+@given(st.integers(0, 2 ** 31))
+def test_error_feedback_unbiased_over_steps(seed):
+    from repro.core.compression import ef_compress, int8_roundtrip
+    rng = np.random.default_rng(seed)
+    residual = jnp.zeros((512,), jnp.float32)
+    total_in, total_out = 0.0, 0.0
+    xs = rng.standard_normal((10, 512)).astype(np.float32)
+    outs = []
+    for i in range(10):
+        x = jnp.asarray(xs[i])
+        y, residual = ef_compress(x, residual, int8_roundtrip)
+        outs.append(np.asarray(y))
+    # EF property: sum of outputs ~= sum of inputs (residual is bounded)
+    drift = np.abs(np.sum(outs, axis=0) - xs.sum(axis=0))
+    bound = np.abs(xs).max() / 127.0 * 1.01 + 1e-6
+    assert (drift <= bound).all()
+
+
+# ---------------- bucketing: flatten/unflatten roundtrip -------------------
+
+
+@SET
+@given(st.lists(st.tuples(st.integers(1, 40), st.integers(1, 5)),
+                min_size=1, max_size=8),
+       st.integers(64, 4096))
+def test_bucketing_roundtrip(shapes, bucket_bytes):
+    from repro.core.bucketing import bucketed_apply, plan_buckets
+    rng = np.random.default_rng(0)
+    tree = {f"p{i}": jnp.asarray(rng.standard_normal((a, b)), jnp.float32)
+            for i, (a, b) in enumerate(shapes)}
+    plan = plan_buckets(tree, bucket_bytes)
+    out = bucketed_apply(plan, tree, lambda x: x)   # identity collective
+    for k in tree:
+        assert bool(jnp.allclose(out[k], tree[k]))
+    # slices tile [0, total) exactly
+    slices = sorted(plan.bucket_slices)
+    assert slices[0][0] == 0
+    for (a, b), (c, d) in zip(slices, slices[1:]):
+        assert b == c
+    assert slices[-1][1] == sum(a * b for a, b in shapes)
+
+
+# ---------------- SSD chunked == quadratic closed form ---------------------
+
+
+@SET
+@given(st.integers(1, 2), st.sampled_from([32, 64, 128]),
+       st.integers(1, 4), st.sampled_from([4, 8]), st.integers(0, 2 ** 31))
+def test_ssd_chunked_equals_quadratic(b, l, h, n, seed):
+    from repro.models.ssm_common import ssd_chunked, ssd_reference
+    rng = np.random.default_rng(seed)
+    p = 8
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)) * 0.5, jnp.float32)
+    a = -jnp.abs(jnp.asarray(rng.standard_normal((b, l, h)), jnp.float32))
+    B = jnp.asarray(rng.standard_normal((b, l, n)) * 0.5, jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, l, n)) * 0.5, jnp.float32)
+    y1, _ = ssd_chunked(x, a, B, C, chunk=32)
+    y2 = ssd_reference(x, a, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+
+
+# ---------------- mLSTM chunked == token-recurrent -------------------------
+
+
+@SET
+@given(st.integers(1, 2), st.sampled_from([32, 64]), st.integers(1, 2),
+       st.integers(0, 2 ** 31))
+def test_mlstm_chunked_equals_recurrent(b, l, h, seed):
+    from repro.models.xlstm import mlstm_chunked, mlstm_recurrent_ref
+    rng = np.random.default_rng(seed)
+    dh = 8
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    q, k, v = mk(b, l, h, dh), mk(b, l, h, dh), mk(b, l, h, dh)
+    ig = mk(b, l, h) * 2.0
+    lf = jax.nn.log_sigmoid(mk(b, l, h) + 2.0)
+    out_c, _ = mlstm_chunked(q, k, v, ig, lf, chunk=16)
+    out_r = mlstm_recurrent_ref(q, k, v, ig, lf)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_r),
+                               atol=1e-3, rtol=1e-4)
+
+
+# ---------------- chunked attention == direct softmax ----------------------
+
+
+@SET
+@given(st.sampled_from([128, 256]), st.booleans(), st.integers(0, 2 ** 31))
+def test_chunked_attention_equals_direct(s, causal, seed):
+    from repro.models.attention import chunked_attention, direct_attention
+    rng = np.random.default_rng(seed)
+    b, h, d = 1, 2, 16
+    mk = lambda: jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    q, k, v = mk(), mk(), mk()
+    out_c = chunked_attention(q, k, v, causal=causal, q_chunk=64, kv_chunk=64)
+    out_d = direct_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_d),
+                               atol=2e-5)
+
+
+# ---------------- cross-entropy sanity --------------------------------------
+
+
+@SET
+@given(st.integers(2, 50), st.integers(0, 2 ** 31))
+def test_cross_entropy_uniform_logits(vocab, seed):
+    from repro.models.common import cross_entropy
+    rng = np.random.default_rng(seed)
+    labels = jnp.asarray(rng.integers(0, vocab, (2, 8)), jnp.int32)
+    logits = jnp.zeros((2, 8, vocab), jnp.float32)
+    ce = cross_entropy(logits, labels)
+    assert float(ce) == jnp.log(vocab).item() or \
+        abs(float(ce) - float(jnp.log(vocab))) < 1e-5
+
+
+# ---------------- fat-tree cost model monotonicity --------------------------
+
+
+@SET
+@given(st.sampled_from([40, 64, 128]), st.integers(100, 1500))
+def test_fat_tree_switch_count_monotone(ports, endpoints):
+    from repro.hw import FatTree
+    t2 = FatTree(ports, 2, endpoints)
+    t3 = FatTree(ports, 3, endpoints)
+    if endpoints <= t2.max_endpoints:
+        assert t2.total_switches <= t3.total_switches

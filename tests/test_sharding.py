@@ -1,0 +1,110 @@
+"""HaiScale layout rules: resolver divisibility, profile selection,
+dry-run cell registry."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ParallelConfig, SHAPES
+from repro.configs.registry import ASSIGNED, dryrun_cells, get_arch
+from repro.parallel.axes import Resolver
+from repro.parallel.spec import choose_batch_axes, make_parallel_config
+
+MESH_1POD = {"data": 16, "model": 16}
+MESH_2POD = {"pod": 2, "data": 16, "model": 16}
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_param_spec_tp_and_fsdp():
+    pcfg = ParallelConfig(tp=16, fsdp=True, batch_axes=("pod", "data"))
+    r = Resolver(FakeMesh(MESH_2POD), pcfg)
+    # llama3 w_ff: (embed 16384, mlp 53248) -> mlp:model, embed:data
+    spec = r.param_spec(("embed", "mlp"), (16384, 53248))
+    assert spec == P("data", "model")
+    # optimizer master gets pod too (ZeRO-1 when pod carries batch)
+    ro = Resolver(FakeMesh(MESH_2POD), pcfg, extra_fsdp_axes=("pod",))
+    spec = ro.param_spec(("embed", "mlp"), (16384, 53248))
+    assert spec == P(("pod", "data"), "model")
+    # small-arch rule: optimizer over ("data","model") when model carries
+    # batch (EXPERIMENTS.md §Perf Cell A/B)
+    rs = Resolver(FakeMesh(MESH_2POD),
+                  ParallelConfig(tp=1, fsdp=True, batch_axes=("data", "model")),
+                  extra_fsdp_axes=("model",))
+    spec = rs.param_spec(("embed", "mlp"), (4096, 13440))
+    assert spec == P(("data", "model"), None)
+
+
+def test_param_spec_drops_nondividing_axes():
+    pcfg = ParallelConfig(tp=16, fsdp=True)
+    r = Resolver(FakeMesh(MESH_1POD), pcfg)
+    # phi4 heads=24 not divisible by 16 -> heads unsharded, embed FSDP
+    spec = r.param_spec(("embed", "heads", "head_dim"), (3072, 24, 128))
+    assert spec == P("data", None, None)
+    # whisper vocab 51865 % 16 != 0 -> vocab unsharded, embed takes FSDP
+    spec = r.param_spec(("vocab", "embed"), (51865, 512))
+    assert spec == P(None, "data")
+    # dividing vocab takes FSDP before embed (avoids the embed-dim
+    # involuntary-remat class — EXPERIMENTS.md §Perf Cell A V3)
+    r1 = Resolver(FakeMesh(MESH_1POD), ParallelConfig(tp=1, fsdp=True))
+    spec = r1.param_spec(("vocab", "embed"), (32000, 2048))
+    assert spec == P("data", None)
+
+
+def test_act_spec_no_duplicate_axes():
+    pcfg = ParallelConfig(tp=16, fsdp=True, seq_shard=True,
+                          batch_axes=("pod", "data"))
+    r = Resolver(FakeMesh(MESH_2POD), pcfg)
+    # q (b, s, h, hd): heads win "model", seq must NOT also take it
+    spec = r.act_spec(("batch", "seq", "heads", "head_dim"),
+                      (256, 4096, 128, 128))
+    flat = [a for el in spec if el for a in
+            (el if isinstance(el, tuple) else (el,))]
+    assert len(flat) == len(set(flat))
+    assert "model" in flat
+    # boundary (b, s, d): seq gets model (SP)
+    spec = r.act_spec(("batch", "seq", "embed"), (256, 4096, 16384))
+    assert spec[1] == "model"
+
+
+def test_choose_batch_axes_divisibility():
+    assert choose_batch_axes(256, MESH_2POD, [("pod", "data", "model"),
+                                              ("data", "model")]) \
+        == ("data", "model")
+    assert choose_batch_axes(128, MESH_2POD, [("pod", "data")]) \
+        == ("pod", "data")
+    assert choose_batch_axes(1, MESH_2POD, [("pod", "data"), ()]) == ()
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_profiles_resolve_for_all_archs(arch, shape):
+    cfg = get_arch(arch)
+    for mesh in (MESH_1POD, MESH_2POD):
+        pc = make_parallel_config(cfg, SHAPES[shape], mesh)
+        prod = 1
+        for a in pc.batch_axes:
+            prod *= mesh.get(a, 1)
+        if pc.batch_axes:
+            assert SHAPES[shape].global_batch % prod == 0, (arch, shape)
+
+
+def test_dryrun_cell_registry():
+    cells = dryrun_cells()
+    # 10 archs x 4 shapes == 40 nominal; long_500k only for ssm/hybrid
+    assert len(cells) == 10 * 3 + 2
+    long_archs = {a for a, s in cells if s == "long_500k"}
+    assert long_archs == {"zamba2-1.2b", "xlstm-125m"}
+
+
+def test_microbatch_divides_per_shard_batch():
+    from repro.parallel.spec import TRAIN_MICROBATCH
+    for arch, mb in TRAIN_MICROBATCH.items():
+        cfg = get_arch(arch)
+        pc = make_parallel_config(cfg, SHAPES["train_4k"], MESH_2POD)
+        prod = 1
+        for a in pc.batch_axes:
+            prod *= MESH_2POD[a]
+        assert (256 // prod) % pc.microbatch == 0, arch
