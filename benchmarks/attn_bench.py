@@ -1,0 +1,114 @@
+"""Attention fwd+bwd: ref (materialized scores) vs fused Pallas kernel.
+
+Per (seq_len x GQA ratio): wall-clock for forward and forward+backward,
+plus an analytic HBM-traffic model (the ref path moves the (sq, skv)
+score matrix several times; the kernel path is O(S) streaming).  Emits
+CSV rows and writes ``BENCH_attn.json``.
+
+On TPU the kernel runs compiled; elsewhere it runs in Pallas interpret
+mode on reduced shapes (wall-clock then measures the interpreter, so the
+JSON records backend + impl so consumers can tell the two apart).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+OUT_PATH = os.environ.get("REPRO_BENCH_ATTN", "BENCH_attn.json")
+ITEM = 4    # fp32 bytes
+
+
+def _cases():
+    if jax.default_backend() == "tpu":
+        return dict(seqs=(1024, 2048, 4096), groups=(1, 4, 8),
+                    b=4, h=16, d=128, impl="kernel", repeat=10)
+    return dict(seqs=(128, 256), groups=(1, 2),
+                b=1, h=4, d=32, impl="interpret", repeat=1)
+
+
+def _time(fn, *args, repeat=1):
+    out = jax.block_until_ready(fn(*args))     # compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat * 1e6
+
+
+def _hbm_model(b, h, kvh, s, d):
+    """Analytic fwd+bwd HBM bytes (fp32): ref materializes + re-reads the
+    score matrix (fwd write+read, bwd read, dscore write) and broadcasts
+    K/V to h heads; the kernel streams q/k/v/o/do/dq/dk/dv + lse once."""
+    scores = b * h * s * s * ITEM
+    io_q = b * h * s * d * ITEM
+    io_kv = b * kvh * s * d * ITEM
+    ref = 4 * scores + 2 * (io_q * 3 + b * h * s * d * ITEM * 2)
+    kernel = (3 * io_q            # q, o, do read in bwd
+              + 2 * io_q          # o write, dq write
+              + 2 * 2 * io_kv     # k, v read fwd+bwd
+              + 2 * io_kv         # dk, dv write
+              + 2 * b * h * s * ITEM)   # lse write + read
+    return ref, kernel
+
+
+def run():
+    cfg = _cases()
+    from repro.kernels.flash_attention import attention_ref, flash_attention
+    b, h, d, impl = cfg["b"], cfg["h"], cfg["d"], cfg["impl"]
+    rng = np.random.default_rng(0)
+    records = []
+    for s in cfg["seqs"]:
+        for g in cfg["groups"]:
+            kvh = max(h // g, 1)
+            q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+            k = jnp.asarray(rng.standard_normal((b, kvh, s, d)), jnp.float32)
+            v = jnp.asarray(rng.standard_normal((b, kvh, s, d)), jnp.float32)
+            ct = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+
+            ref_fwd = jax.jit(
+                lambda q, k, v: attention_ref(q, k, v, causal=True))
+            ker_fwd = jax.jit(
+                lambda q, k, v: flash_attention(q, k, v, causal=True,
+                                                impl=impl))
+            ref_grad = jax.jit(jax.grad(
+                lambda q, k, v: jnp.sum(
+                    attention_ref(q, k, v, causal=True) * ct),
+                argnums=(0, 1, 2)))
+            ker_grad = jax.jit(jax.grad(
+                lambda q, k, v: jnp.sum(
+                    flash_attention(q, k, v, causal=True, impl=impl) * ct),
+                argnums=(0, 1, 2)))
+
+            rep = cfg["repeat"]
+            rec = {
+                "b": b, "h": h, "kv_heads": kvh, "seq": s, "head_dim": d,
+                "gqa_group": g, "impl": impl,
+                "fwd_us_ref": _time(ref_fwd, q, k, v, repeat=rep),
+                "fwd_us_kernel": _time(ker_fwd, q, k, v, repeat=rep),
+                "fwdbwd_us_ref": _time(ref_grad, q, k, v, repeat=rep),
+                "fwdbwd_us_kernel": _time(ker_grad, q, k, v, repeat=rep),
+            }
+            rec["hbm_bytes_ref"], rec["hbm_bytes_kernel"] = \
+                _hbm_model(b, h, kvh, s, d)
+            records.append(rec)
+            emit(f"attn.s{s}.g{g}.fwdbwd_ref", rec["fwdbwd_us_ref"],
+                 f"hbm={rec['hbm_bytes_ref']}")
+            emit(f"attn.s{s}.g{g}.fwdbwd_kernel", rec["fwdbwd_us_kernel"],
+                 f"hbm={rec['hbm_bytes_kernel']} impl={impl}")
+
+    payload = {"backend": jax.default_backend(), "cases": records}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("attn.bench_written", 0, f"{OUT_PATH}({len(records)}cases)")
+    return {"ok": True, "cases": records}
+
+
+if __name__ == "__main__":
+    run()

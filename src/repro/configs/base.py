@@ -60,6 +60,8 @@ class ModelConfig:
     # --- numerics ---
     param_dtype: str = "float32"    # canonical/master dtype
     compute_dtype: str = "bfloat16"
+    # --- attention core dispatch (models.attention.attention_core) ---
+    attn_impl: str = "auto"      # auto | kernel | interpret | ref
     # --- attention flavor for long context ---
     notes: str = ""
 

@@ -1,0 +1,16 @@
+"""Static mesh-axis introspection, compatible across jax versions."""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a mapped mesh axis (inside shard_map/pmap).
+
+    jax >= 0.5 exposes ``lax.axis_size``; on 0.4.x the axis env is reached
+    via ``jax.core.axis_frame``, which returns the size directly.
+    """
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return jax.core.axis_frame(axis_name)

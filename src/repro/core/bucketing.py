@@ -8,10 +8,16 @@ into fixed-byte buckets in reverse-layer order (ready-first), each bucket
 synced by its own collective, so the compiled HLO has many independent
 all-reduces that can interleave with compute instead of one monolithic
 end-of-step collective.
+
+The flat concat travels in ``wire_dtype`` — by default the promoted dtype
+of the leaves, so an all-bf16 gradient tree stays bf16 on the wire
+(upcasting to fp32 would double cross-pod bytes and silently negate
+``compress="bf16"``).  Leaf dtypes are restored on unflatten.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -27,22 +33,33 @@ class BucketPlan:
     dtypes: tuple
     sizes: tuple
     bucket_slices: tuple     # list of (start, end) into the flat concat
+    wire_dtype: object       # dtype of the flat concat on the wire
 
 
-def plan_buckets(tree, bucket_bytes=DEFAULT_BUCKET_BYTES) -> BucketPlan:
+def _promoted_dtype(dtypes):
+    if not dtypes:
+        return jnp.dtype(jnp.float32)
+    return jnp.dtype(functools.reduce(jnp.promote_types, dtypes))
+
+
+def plan_buckets(tree, bucket_bytes=DEFAULT_BUCKET_BYTES,
+                 wire_dtype=None) -> BucketPlan:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     shapes = tuple(l.shape for l in leaves)
     dtypes = tuple(l.dtype for l in leaves)
     sizes = tuple(int(np.prod(s)) for s in shapes)
+    wire_dtype = jnp.dtype(wire_dtype) if wire_dtype is not None \
+        else _promoted_dtype(dtypes)
     # reverse order: last-produced grads (first layers... reverse of forward)
     # are bucketed first so their sync can start earliest during backward.
+    # Bucket byte budgets count *wire* bytes — what the collective moves.
     slices = []
     total = sum(sizes)
     start = total
     cur = 0
     end = total
-    for sz, dt in zip(sizes[::-1], dtypes[::-1]):
-        b = sz * jnp.dtype(dt).itemsize
+    for sz in sizes[::-1]:
+        b = sz * wire_dtype.itemsize
         if cur + b > bucket_bytes and cur > 0:
             slices.append((start, end))
             end = start
@@ -50,12 +67,15 @@ def plan_buckets(tree, bucket_bytes=DEFAULT_BUCKET_BYTES) -> BucketPlan:
         start -= sz
         cur += b
     slices.append((start, end))
-    return BucketPlan(treedef, shapes, dtypes, sizes, tuple(slices))
+    return BucketPlan(treedef, shapes, dtypes, sizes, tuple(slices),
+                      wire_dtype)
 
 
-def flatten_tree(tree) -> jax.Array:
+def flatten_tree(tree, wire_dtype=None) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+    if wire_dtype is None:
+        wire_dtype = _promoted_dtype([l.dtype for l in leaves])
+    return jnp.concatenate([l.reshape(-1).astype(wire_dtype)
                             for l in leaves])
 
 
@@ -69,7 +89,7 @@ def unflatten_tree(plan: BucketPlan, flat: jax.Array):
 
 def bucketed_apply(plan: BucketPlan, tree, fn):
     """Apply ``fn`` (a collective) per bucket of the flattened tree."""
-    flat = flatten_tree(tree)
+    flat = flatten_tree(tree, plan.wire_dtype)
     parts = [fn(flat[s:e]) for s, e in plan.bucket_slices]
     # bucket_slices cover [0, total) in reverse contiguous order
     ordered = sorted(zip(plan.bucket_slices, parts), key=lambda t: t[0][0])

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.axis import axis_size
+
 BLOCK = 256
 
 
@@ -53,7 +55,7 @@ def int8_psum(x, axis_name, block=BLOCK):
     all_gather the reduced chunks.  Wire bytes per rank: 2 * |x| / 4 (int8)
     + scales — vs 2 * |x| fp32 for a flat psum.
     """
-    P = lax.axis_size(axis_name)
+    P = axis_size(axis_name)
     if P == 1:
         return x
     shape, dtype = x.shape, x.dtype

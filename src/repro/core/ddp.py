@@ -50,18 +50,22 @@ def make_ddp_grad_sync(plan: bucketing.BucketPlan, *,
 def make_ddp_train_step(loss_fn: Callable, optimizer, mesh, *,
                         batch_axes=("pod", "data"), compress="",
                         hierarchical=True, bucket_bytes=None,
-                        params_template=None):
+                        params_template=None, wire_dtype=None):
     """Build a jitted DDP train step.
 
     ``loss_fn(params, batch) -> (loss, metrics)``; params replicated,
     batch sharded on dim 0 over ``batch_axes``.
     ``optimizer``: repro.optim AdamW-like with .init/.apply (replicated).
+    ``wire_dtype``: dtype gradients travel in on the wire; defaults to
+    the promoted leaf dtype (bf16 grads stay bf16 — no silent fp32
+    upcast doubling cross-pod bytes).
     """
     from jax.experimental.shard_map import shard_map
 
     plan = bucketing.plan_buckets(
         params_template,
-        bucket_bytes or bucketing.DEFAULT_BUCKET_BYTES)
+        bucket_bytes or bucketing.DEFAULT_BUCKET_BYTES,
+        wire_dtype=wire_dtype)
     axes_in_mesh = tuple(a for a in batch_axes if a in mesh.shape)
     weak_axis = axes_in_mesh[0] if len(axes_in_mesh) > 1 else None
     strong_axis = axes_in_mesh[-1]

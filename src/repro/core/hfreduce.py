@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.axis import axis_size
+
 
 def _pad_to(x, mult):
     n = x.shape[0]
@@ -45,7 +47,7 @@ def hfreduce(x, *, strong_axis="data", weak_axis="pod",
     compressed or tree-scheduled allreduce).  Defaults to ``lax.psum``.
     """
     weak_psum = weak_psum or (lambda v, ax: lax.psum(v, ax))
-    strong = lax.axis_size(strong_axis)
+    strong = axis_size(strong_axis)
     shape = x.shape
     flat = x.reshape(-1)
     flat, pad = _pad_to(flat, strong)

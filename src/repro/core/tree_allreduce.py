@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.axis import axis_size
+
 
 # ------------------------- schedule construction ---------------------------
 
@@ -76,7 +78,7 @@ def _masks(pairs, n):
 
 
 def _tree_allreduce_one(x, axis_name, shift):
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     reduce_rounds, bcast_rounds = tree_schedule(n, shift)
@@ -95,7 +97,7 @@ def _tree_allreduce_one(x, axis_name, shift):
 
 def tree_allreduce(x, axis_name="pod"):
     """Double binary tree: two complementary trees, half the data each."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     shape = x.shape
@@ -114,7 +116,7 @@ def tree_allreduce(x, axis_name="pod"):
 
 def ring_allreduce(x, axis_name="data"):
     """Reference ring (reduce-scatter + all-gather), the 'NCCL' analogue."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     shape = x.shape

@@ -1,4 +1,29 @@
-from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
+"""Flash attention: fused Pallas TPU kernels + jnp oracle.
 
-__all__ = ["flash_attention", "attention_ref"]
+Implementation matrix (pass x impl). "kernel" compiles for TPU;
+"interpret" runs the same Pallas kernels through the interpreter (CPU
+tests); "ref" is the pure-jnp oracle:
+
+============  ==========================  =======================
+pass          kernel / interpret          ref
+============  ==========================  =======================
+forward       kernel.flash_attention_fwd  ref.attention_ref
+              (+ logsumexp residual via
+              save_residuals=True)
+backward dKV  kernel.flash_attention_     jax autodiff of the ref
+              bwd_dkv (GQA group
+              accumulated on-chip)
+backward dQ   kernel.flash_attention_     jax autodiff of the ref
+              bwd_dq
+============  ==========================  =======================
+
+``ops.flash_attention`` wires the kernels through ``jax.custom_vjp`` so
+the op is trainable end-to-end with O(S) memory on both passes, and pads
+non-multiple-of-block sequence lengths.  The other Pallas ops in this
+package's siblings (ssd_scan, topk_gating, rmsnorm) are still
+forward-only and differentiate through their refs — see ROADMAP.md.
+"""
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref, attention_ref_lse
+
+__all__ = ["flash_attention", "attention_ref", "attention_ref_lse"]

@@ -1,21 +1,120 @@
-"""Jitted wrapper: flash kernel on TPU, oracle elsewhere (or interpret)."""
+"""Differentiable jitted wrapper: flash kernels on TPU, oracle elsewhere.
+
+``flash_attention`` is wired through ``jax.custom_vjp``:
+
+* primal / fwd: the Pallas forward kernel; the vjp-fwd variant also saves
+  the per-row logsumexp residual, so the backward never needs the
+  (sq, skv) score matrix;
+* bwd: ``delta = rowsum(o * do)`` is precomputed once in jnp and shared by
+  the two recompute kernels (dKV then dQ) — O(S) memory on both passes.
+
+Sequence lengths that are not block multiples are handled here by padding
+sq/skv up to the (sublane-aligned) block size: padded keys are masked
+inside the kernels via ``kv_len``; padded query rows produce garbage that
+is sliced off, and contribute exactly zero to dK/dV because their ``do``
+rows are zero-padded.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.kernel import (flash_attention_bwd_dkv,
+                                                  flash_attention_bwd_dq,
+                                                  flash_attention_fwd)
 from repro.kernels.flash_attention.ref import attention_ref
 
+_SUBLANE = 16    # sequence-block padding granularity (bf16-safe tile)
 
-@functools.partial(jax.jit, static_argnames=("causal", "impl", "bq", "bk"))
-def flash_attention(q, k, v, *, causal=True, impl="auto", bq=128, bk=128):
+
+def _round_up(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+def _pad_axis(x, axis: int, target: int):
+    if x.shape[axis] == target:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - x.shape[axis])
+    return jnp.pad(x, pad)
+
+
+def _block_geometry(sq: int, skv: int, bq: int, bk: int):
+    """Clamp blocks to (aligned) sequence lengths; return padded lengths."""
+    bq = min(bq, _round_up(sq, _SUBLANE))
+    bk = min(bk, _round_up(skv, _SUBLANE))
+    return bq, bk, _round_up(sq, bq), _round_up(skv, bk)
+
+
+def _fwd(q, k, v, causal, q_offset, interpret, bq, bk, save_residuals):
+    sq, skv = q.shape[2], k.shape[2]
+    bq, bk, sq_p, skv_p = _block_geometry(sq, skv, bq, bk)
+    qp = _pad_axis(q, 2, sq_p)
+    kp = _pad_axis(k, 2, skv_p)
+    vp = _pad_axis(v, 2, skv_p)
+    kv_len = skv if skv_p != skv else None
+    out = flash_attention_fwd(qp, kp, vp, causal=causal, bq=bq, bk=bk,
+                              interpret=interpret, q_offset=q_offset,
+                              kv_len=kv_len, save_residuals=save_residuals)
+    if save_residuals:
+        o, lse = out
+        return o[:, :, :sq], lse[:, :, :sq]
+    return out[:, :, :sq]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_attention(q, k, v, causal, q_offset, interpret, bq, bk):
+    return _fwd(q, k, v, causal, q_offset, interpret, bq, bk, False)
+
+
+def _flash_attention_fwd_rule(q, k, v, causal, q_offset, interpret, bq, bk):
+    o, lse = _fwd(q, k, v, causal, q_offset, interpret, bq, bk, True)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_attention_bwd_rule(causal, q_offset, interpret, bq, bk, res, do):
+    q, k, v, o, lse = res
+    sq, skv = q.shape[2], k.shape[2]
+    bq, bk, sq_p, skv_p = _block_geometry(sq, skv, bq, bk)
+    delta = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32), axis=-1)
+    qp = _pad_axis(q, 2, sq_p)
+    dop = _pad_axis(do, 2, sq_p)        # zero rows -> padded q contributes 0
+    lsep = _pad_axis(lse, 2, sq_p)
+    deltap = _pad_axis(delta, 2, sq_p)
+    kp = _pad_axis(k, 2, skv_p)
+    vp = _pad_axis(v, 2, skv_p)
+    kv_len = skv if skv_p != skv else None
+    kw = dict(causal=causal, bq=bq, bk=bk, q_offset=q_offset, kv_len=kv_len,
+              interpret=interpret)
+    dk, dv = flash_attention_bwd_dkv(qp, kp, vp, dop, lsep, deltap, **kw)
+    dq = flash_attention_bwd_dq(qp, kp, vp, dop, lsep, deltap, **kw)
+    return (dq[:, :, :sq].astype(q.dtype),
+            dk[:, :, :skv].astype(k.dtype),
+            dv[:, :, :skv].astype(v.dtype))
+
+
+_flash_attention.defvjp(_flash_attention_fwd_rule, _flash_attention_bwd_rule)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "impl", "bq", "bk", "q_offset"))
+def flash_attention(q, k, v, *, causal=True, impl="auto", bq=128, bk=128,
+                    q_offset=None):
     """impl: 'auto' (kernel on TPU, ref otherwise) | 'kernel' | 'interpret'
-    | 'ref'."""
+    | 'ref'.  Differentiable on every path: kernel/interpret use the fused
+    Pallas custom_vjp, ref uses jax autodiff of the jnp oracle.
+
+    ``q_offset``: absolute position of q[0] among the keys (static);
+    defaults to skv - sq (end-aligned). The ref path always uses the
+    end-aligned convention.
+    """
     if impl == "auto":
         impl = "kernel" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
         return attention_ref(q, k, v, causal=causal)
-    return flash_attention_fwd(q, k, v, causal=causal, bq=bq, bk=bk,
-                               interpret=(impl == "interpret"))
+    if q_offset is None:
+        q_offset = k.shape[2] - q.shape[2]
+    return _flash_attention(q, k, v, causal, q_offset,
+                            impl == "interpret", bq, bk)

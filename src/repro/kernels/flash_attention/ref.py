@@ -7,18 +7,30 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def attention_ref(q, k, v, *, causal=True):
-    """q (b, h, sq, d); k/v (b, kvh, skv, d). fp32 softmax."""
+def _masked_scores(q, k, *, causal):
     b, h, sq, d = q.shape
     kvh, skv = k.shape[1], k.shape[2]
-    group = h // kvh
-    k = jnp.repeat(k, group, axis=1)
-    v = jnp.repeat(v, group, axis=1)
+    k = jnp.repeat(k, h // kvh, axis=1)
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * (d ** -0.5)
     if causal:
         mask = jnp.tril(jnp.ones((sq, skv), bool), skv - sq)
         s = jnp.where(mask, s, NEG_INF)
+    return s
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """q (b, h, sq, d); k/v (b, kvh, skv, d). fp32 softmax."""
+    h, kvh = q.shape[1], k.shape[1]
+    s = _masked_scores(q, k, causal=causal)
+    v = jnp.repeat(v, h // kvh, axis=1)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", w,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_ref_lse(q, k, *, causal=True):
+    """Reference per-row softmax log-normalizer, (b, h, sq) fp32 — the
+    oracle for the forward kernel's saved logsumexp residual."""
+    s = _masked_scores(q, k, causal=causal)
+    return jax.scipy.special.logsumexp(s, axis=-1)

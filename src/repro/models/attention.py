@@ -1,10 +1,12 @@
-"""GQA attention: projections, chunked (flash-style) softmax core, KV cache.
+"""GQA attention: projections, fused/chunked softmax cores, KV cache.
 
-The chunked jnp core is the memory-frugal XLA path used by train/prefill at
-long sequence lengths, and doubles as the oracle for the Pallas
-``flash_attention`` kernel.  Decode attends against a KV cache whose
-*sequence* dimension may be sharded over the "model" mesh axis
-(flash-decoding style — GSPMD inserts the partial-softmax combine).
+On TPU, train/prefill attention runs the fused Pallas ``flash_attention``
+op (forward + custom_vjp backward, O(S) memory on both passes — see
+``attention_core``).  The chunked jnp core is the memory-frugal XLA
+fallback off-TPU and doubles as the oracle for the Pallas kernel.  Decode
+attends against a KV cache whose *sequence* dimension may be sharded over
+the "model" mesh axis (flash-decoding style — GSPMD inserts the
+partial-softmax combine).
 """
 from __future__ import annotations
 
@@ -154,8 +156,29 @@ def chunked_attention(q, k, v, *, causal: bool, q_chunk=1024, kv_chunk=1024,
 
 
 def attention_core(cfg, q, k, v, *, causal=True, q_offset=0,
-                   chunked_threshold=2048):
-    """Dispatch: GQA-broadcast then direct or chunked core."""
+                   chunked_threshold=2048, impl=None):
+    """Dispatch the training/prefill softmax core.
+
+    ``impl`` (default ``cfg.attn_impl``): "kernel"/"interpret" force the
+    fused Pallas ``flash_attention`` (custom_vjp backward, O(S) memory on
+    both passes, GQA folded into the kernel so K/V are never broadcast in
+    HBM); "auto" uses the kernel only on TPU and otherwise falls back to
+    the jnp direct/chunked cores; "ref" forces the jnp path.
+    """
+    if impl is None:
+        impl = getattr(cfg, "attn_impl", "auto")
+    # "auto" only picks the kernel for multi-token queries: one-token
+    # decode (e.g. Whisper cross-attention in the decode loop) would pay
+    # sublane padding + a pallas_call per token for a single matmul row.
+    if impl in ("kernel", "interpret") or (
+            impl == "auto" and q.shape[1] > 1 and
+            jax.default_backend() == "tpu"):
+        from repro.kernels.flash_attention import flash_attention
+        o = flash_attention(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2), causal=causal,
+            impl="kernel" if impl == "auto" else impl, q_offset=q_offset)
+        return jnp.swapaxes(o, 1, 2)
     k = _broadcast_kv(k, cfg.n_heads)
     v = _broadcast_kv(v, cfg.n_heads)
     skv = k.shape[1]

@@ -1,7 +1,11 @@
 """Dense decoder-only transformer (+ encoder-decoder variant for Whisper).
 
 Layers are stacked and executed with ``lax.scan`` + remat so HLO stays small
-at 126 layers; weights are cast to the compute dtype at use.
+at 126 layers; weights are cast to the compute dtype at use.  Self-attention
+in train/prefill goes through ``attention_core``, which on TPU (or with
+``cfg.attn_impl``) runs the fused Pallas flash-attention op with its
+custom_vjp backward, so the per-layer remat recomputes an O(S) forward
+instead of differentiating through a materialized score matrix.
 """
 from __future__ import annotations
 

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.axis import axis_size
+
 
 def split_stages(stacked_params, n_stages: int):
     """(L, ...) stacked layer params -> (P, L/P, ...) for P("pipe") sharding."""
@@ -41,7 +43,7 @@ def pipeline_apply(stage_fn, stage_params, x_micro, *, axis: str = "pipe"):
     Returns (n_micro, mb, ...) outputs, valid on every rank (psum-broadcast
     from the last stage).
     """
-    P = lax.axis_size(axis)
+    P = axis_size(axis)
     rank = lax.axis_index(axis)
     n_micro = x_micro.shape[0]
     sp = jax.tree_util.tree_map(lambda a: a[0], stage_params)

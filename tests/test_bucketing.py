@@ -1,0 +1,65 @@
+"""Bucketing wire-dtype: gradients must not be silently upcast to fp32
+before the collective (that would double cross-pod bytes for bf16 grads
+and negate compress="bf16")."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bucketing import bucketed_apply, flatten_tree, plan_buckets
+
+
+def _tree(dtypes):
+    rng = np.random.default_rng(3)
+    return {f"p{i}": jnp.asarray(rng.standard_normal((17, 5)), dt)
+            for i, dt in enumerate(dtypes)}
+
+
+def test_bf16_tree_stays_bf16_on_wire():
+    tree = _tree([jnp.bfloat16] * 4)
+    plan = plan_buckets(tree, bucket_bytes=256)
+    assert plan.wire_dtype == jnp.bfloat16
+    seen = []
+    out = bucketed_apply(plan, tree,
+                         lambda x: (seen.append(x.dtype), x)[1])
+    assert seen and all(dt == jnp.bfloat16 for dt in seen)
+    for k in tree:
+        assert out[k].dtype == jnp.bfloat16
+        assert bool(jnp.all(out[k] == tree[k]))
+
+
+def test_mixed_tree_promotes_and_restores_leaf_dtypes():
+    tree = _tree([jnp.float32, jnp.bfloat16, jnp.float32])
+    plan = plan_buckets(tree, bucket_bytes=512)
+    assert plan.wire_dtype == jnp.float32
+    out = bucketed_apply(plan, tree, lambda x: x)
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype
+        np.testing.assert_allclose(np.asarray(out[k], np.float32),
+                                   np.asarray(tree[k], np.float32))
+
+
+def test_explicit_wire_dtype_override():
+    tree = _tree([jnp.float32] * 2)
+    plan = plan_buckets(tree, bucket_bytes=512, wire_dtype=jnp.bfloat16)
+    assert plan.wire_dtype == jnp.bfloat16
+    out = bucketed_apply(plan, tree, lambda x: x)
+    for k in tree:
+        assert out[k].dtype == jnp.float32    # restored, lossy round-trip
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(tree[k]),
+                                   atol=1e-2)
+
+
+def test_bucket_slices_sized_by_wire_bytes():
+    # 4 leaves x 85 f32 elements; bf16 wire halves the bytes, so a budget
+    # that fits 2 leaves in fp32 fits 4 in bf16 -> fewer buckets.
+    tree = _tree([jnp.float32] * 4)
+    budget = 2 * 85 * 4 + 1
+    n_f32 = len(plan_buckets(tree, budget).bucket_slices)
+    n_bf16 = len(plan_buckets(tree, budget,
+                              wire_dtype=jnp.bfloat16).bucket_slices)
+    assert n_bf16 < n_f32
+
+
+def test_flatten_tree_default_preserves_uniform_dtype():
+    tree = _tree([jnp.bfloat16] * 2)
+    assert flatten_tree(tree).dtype == jnp.bfloat16

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.interpret
+
 RNG = np.random.default_rng(42)
 
 
