@@ -1,0 +1,135 @@
+"""Decode suite: dense lockstep decode vs the paged serving engine.
+
+Per (batch x context): wall-clock per decode step for (a) the dense
+``model.decode_step`` loop against a contiguous grown cache and (b) a
+``ServingEngine`` step (paged pool + block tables + flash decode,
+including the engine's host-side bookkeeping), plus an analytic HBM
+bytes/token model: the dense path streams the *allocated* cache
+(capacity, padded/grown) through the attention core every step for
+every sequence, while the paged path reads only the blocks a sequence
+actually owns.  Emits CSV rows and writes ``BENCH_decode.json``.
+
+Off-TPU the paged attention runs the jnp gather ref (and the timings
+measure XLA CPU); on TPU it compiles the Pallas flash-decode kernel.
+The JSON records backend + impl so consumers can tell the two apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+OUT_PATH = os.environ.get("REPRO_BENCH_DECODE", "BENCH_decode.json")
+KV_BYTES = 2     # bfloat16 pool/cache entries
+
+
+def _cases():
+    if jax.default_backend() == "tpu":
+        return dict(batches=(8, 32), prompt=512, gen=64, block=64,
+                    n_layers=4, repeat=20)
+    return dict(batches=(2, 4), prompt=18, gen=6, block=16,
+                n_layers=2, repeat=2)
+
+
+def _hbm_per_token(cfg, *, dense_cap, paged_blocks, block):
+    """Attention-cache HBM bytes one sequence moves to decode one token."""
+    per_pos = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim * KV_BYTES
+    return dense_cap * per_pos, paged_blocks * block * per_pos
+
+
+def run():
+    from repro.configs.registry import smoke_config
+    from repro.data.synthetic import batch_for_model
+    from repro.models import build_model
+    from repro.serve_lib import grow_cache_geometric
+    from repro.serving import ServingEngine
+
+    c = _cases()
+    cfg = dataclasses.replace(smoke_config("codeqwen1.5-7b"),
+                              n_layers=c["n_layers"],
+                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    records = []
+
+    for b in c["batches"]:
+        prompt, gen, block = c["prompt"], c["gen"], c["block"]
+        batch = {k: jnp.asarray(v) for k, v in
+                 batch_for_model(cfg, "prefill", 0, b, prompt).items()}
+
+        # -- dense lockstep --
+        # grow for every timed step (1 warmup + (gen-1)*repeat), not just
+        # gen: an undersized cache would clamp writes and time a
+        # corrupted decode
+        total_steps = 1 + (gen - 1) * c["repeat"]
+        cache, logits = jax.jit(model.prefill)(params, batch)
+        cache = grow_cache_geometric(cache, total_steps + 1)
+        decode = jax.jit(model.decode_step)
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cache, logits = decode(params, cache, toks)       # compile
+        jax.block_until_ready(logits)
+        steps = total_steps - 1
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            cache, logits = decode(params, cache, toks)
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(logits)
+        dense_us = (time.perf_counter() - t0) / steps * 1e6
+        dense_cap = cache["k"].shape[2]
+
+        # -- paged engine (admission excluded: time steady-state steps;
+        # min_table_width pins one compiled step shape so no bucket-
+        # crossing recompile lands inside the timed window) --
+        max_blocks = -(-(prompt + gen * (c["repeat"] + 1)) // block)
+        n_blocks = b * max_blocks + 1
+        eng = ServingEngine(model, params, n_blocks=n_blocks,
+                            block_size=block, max_slots=b,
+                            min_table_width=max_blocks)
+        for row in np.asarray(batch["tokens"]):
+            eng.submit(row, gen * (c["repeat"] + 1))
+        eng.step()                                        # admit + compile
+        t0 = time.perf_counter()
+        paged_steps = (gen - 1) * c["repeat"]
+        for _ in range(paged_steps):
+            eng.step()
+        paged_us = (time.perf_counter() - t0) / paged_steps * 1e6
+        paged_blocks = max(len(r.blocks)
+                           for r in eng._slots if r is not None)
+
+        hbm_dense, hbm_paged = _hbm_per_token(
+            cfg, dense_cap=dense_cap, paged_blocks=paged_blocks,
+            block=block)
+        rec = {
+            "batch": b, "prompt": prompt, "gen": gen, "block_size": block,
+            "impl": impl, "n_layers": cfg.n_layers,
+            "dense_us_per_step": dense_us,
+            "paged_us_per_step": paged_us,
+            "dense_tokens_per_s": b / (dense_us * 1e-6),
+            "paged_tokens_per_s": b / (paged_us * 1e-6),
+            "dense_cache_capacity": dense_cap,
+            "paged_blocks_held": paged_blocks,
+            "hbm_bytes_per_token_dense": hbm_dense,
+            "hbm_bytes_per_token_paged": hbm_paged,
+        }
+        records.append(rec)
+        emit(f"decode.b{b}.dense", dense_us, f"hbm_per_tok={hbm_dense}")
+        emit(f"decode.b{b}.paged", paged_us,
+             f"hbm_per_tok={hbm_paged} impl={impl}")
+
+    payload = {"backend": jax.default_backend(), "cases": records}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("decode.bench_written", 0, f"{OUT_PATH}({len(records)}cases)")
+    return {"ok": True, "cases": records}
+
+
+if __name__ == "__main__":
+    run()

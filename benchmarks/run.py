@@ -8,9 +8,9 @@ from __future__ import annotations
 
 import sys
 
-from benchmarks import (attn_bench, fig7_allreduce, fig8_weakscaling,
-                        fig9_strongscaling, roofline, table2_costperf,
-                        table3_network, table6_failures)
+from benchmarks import (attn_bench, decode_bench, fig7_allreduce,
+                        fig8_weakscaling, fig9_strongscaling, roofline,
+                        table2_costperf, table3_network, table6_failures)
 
 SUITES = {
     "table2": table2_costperf.run,
@@ -21,6 +21,7 @@ SUITES = {
     "table6": table6_failures.run,
     "roofline": roofline.run,
     "attn": attn_bench.run,
+    "decode": decode_bench.run,
 }
 
 

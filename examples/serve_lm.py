@@ -1,9 +1,16 @@
-"""Batched serving example: prefill a batch of prompts, decode greedily,
-measure per-step latency — on a sub-quadratic (hybrid) architecture whose
+"""Serving examples: lockstep batch decode, then continuous batching.
+
+Part 1 — dense path on a sub-quadratic (hybrid) architecture whose
 decode state is O(1) in context length.
 
+Part 2 — the paged serving engine on an attention architecture:
+requests are submitted with staggered arrivals and join the *running*
+decode batch as slots free up (block-paged KV + flash decode), instead
+of waiting for the whole lockstep batch to finish.
+
   PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b
-  PYTHONPATH=src python examples/serve_lm.py --arch xlstm-125m --gen 32
+  PYTHONPATH=src python examples/serve_lm.py --gen 32 --stagger 4
+  PYTHONPATH=src python examples/serve_lm.py --skip-dense
 """
 import argparse
 
@@ -12,15 +19,27 @@ from repro.launch.serve import main as serve_main
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="zamba2-1.2b")
+    ap.add_argument("--arch", default="zamba2-1.2b",
+                    help="dense-path architecture (any family)")
+    ap.add_argument("--paged-arch", default="codeqwen1.5-7b",
+                    help="paged-path architecture (attention KV family)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="admit request i at engine step i*stagger")
+    ap.add_argument("--skip-dense", action="store_true")
     args = ap.parse_args()
-    serve_main(["--arch", args.arch, "--smoke",
-                "--batch", str(args.batch),
-                "--prompt-len", str(args.prompt_len),
-                "--gen", str(args.gen)])
+
+    common = ["--smoke", "--batch", str(args.batch),
+              "--prompt-len", str(args.prompt_len), "--gen", str(args.gen)]
+    if not args.skip_dense:
+        print(f"== dense lockstep decode ({args.arch}) ==")
+        serve_main(["--arch", args.arch] + common)
+    print(f"\n== continuous batching, paged KV ({args.paged_arch}, "
+          f"stagger={args.stagger}) ==")
+    serve_main(["--arch", args.paged_arch, "--decode-impl", "paged",
+                "--stagger", str(args.stagger)] + common)
 
 
 if __name__ == "__main__":

@@ -62,6 +62,10 @@ class ModelConfig:
     compute_dtype: str = "bfloat16"
     # --- attention core dispatch (models.attention.attention_core) ---
     attn_impl: str = "auto"      # auto | kernel | interpret | ref
+    # --- serving decode path (serve_lib.BatchServer / repro.serving) ---
+    decode_impl: str = "dense"   # dense (lockstep batch decode against a
+                                 # contiguous cache) | paged (continuous
+                                 # batching + block-paged flash decode)
     # --- attention flavor for long context ---
     notes: str = ""
 

@@ -1,0 +1,17 @@
+"""Paged flash-decode: fused Pallas TPU kernel + jnp oracle.
+
+The decode-time sibling of ``kernels.flash_attention``: one query token
+per sequence, K/V gathered from a block-paged pool through a per-
+sequence block table (scalar-prefetched so the gather is resolved at
+DMA-issue time), online softmax with GQA broadcast on-chip.  "kernel"
+compiles for TPU; "interpret" runs the same kernel through the Pallas
+interpreter (CPU tests); "ref" is the pure-jnp oracle that gathers the
+blocks densely.
+
+Consumed by ``models.attention.paged_decode_attention`` and, through
+it, the continuous-batching engine in ``repro.serving``.
+"""
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+__all__ = ["flash_decode", "flash_decode_ref"]

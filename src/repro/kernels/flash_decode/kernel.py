@@ -1,0 +1,121 @@
+"""Paged flash-decode kernel (Pallas TPU).
+
+One-pass online-softmax attention of a single query token per sequence
+against a block-paged KV pool.  The grid walks (seq, kv_head, kv_block)
+with the kv_block axis innermost and sequential, so the (m, l, acc)
+running stats live in VMEM scratch across a sequence's blocks — the
+flash-decoding recurrence, but with the key/value blocks *gathered
+through a block table* instead of read from a contiguous cache.
+
+The gather costs nothing extra in HBM traffic: the block table and
+per-sequence lengths ride in as scalar-prefetch operands
+(``pltpu.PrefetchScalarGridSpec``), so the K/V BlockSpec index_maps
+resolve ``block_tables[seq, j]`` *before* the kernel body runs and the
+pipeline DMAs exactly the physical block the sequence owns.  Logical
+position of entry ``o`` of table slot ``j`` is ``j * block_size + o``
+regardless of the physical block id, so fragmented allocations attend
+in the right order for free.
+
+GQA runs on-chip: q arrives pre-grouped as (b, kvh, group, d) and the
+whole query-head group for one kv head shares each gathered K/V block,
+so grouped K/V are never broadcast to full head count in HBM.  The
+group axis is the sublane dimension — ops.py pads it to the fp32
+sublane count (8) so tiles stay aligned on real hardware.
+
+Masking: key position ``p`` is valid iff ``p < lengths[seq]``.  Blocks
+past a sequence's last block are walked but fully masked (their table
+entries point at the reserved scratch block); a fully-masked block
+leaves (m, l, acc) unchanged because ``exp(NEG_INF - m_prev) == 0`` for
+any finite ``m_prev``.  A sequence with ``lengths == 0`` (an idle
+engine slot) produces garbage output that callers must ignore.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_sc, l_sc, acc_sc, *, bs: int, scale: float, nb: int):
+    si = pl.program_id(0)          # sequence (batch slot)
+    ji = pl.program_id(2)          # kv block (innermost, sequential)
+
+    @pl.when(ji == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (gp, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # (bs, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)      # (bs, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    gp = s.shape[0]
+    kpos = ji * bs + jax.lax.broadcasted_iota(jnp.int32, (gp, bs), 1)
+    s = jnp.where(kpos < len_ref[si], s, NEG_INF)
+
+    m_prev = m_sc[...]
+    l_prev = l_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_sc[...] = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    @pl.when(ji == nb - 1)
+    def _finish():
+        l_safe = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0] = (acc_sc[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode_kernel(q, k_pool, v_pool, block_tables, lengths, *,
+                        interpret=False):
+    """q (b, kvh, gp, d); k/v_pool (n_blocks, bs, kvh, d);
+    block_tables (b, nbmax) int32; lengths (b,) int32 -> (b, kvh, gp, d).
+
+    ``gp`` is the (padded) GQA group size — query head ``kv * gp + g``
+    attends through kv head ``kv``.  ``nbmax`` is the padded table width;
+    entries past a sequence's live blocks must point at a valid (e.g.
+    scratch) physical block and are masked via ``lengths``.
+    """
+    b, kvh, gp, d = q.shape
+    bs = k_pool.shape[1]
+    nbmax = block_tables.shape[1]
+    scale = d ** -0.5
+
+    kernel = functools.partial(_decode_kernel, bs=bs, scale=scale, nb=nbmax)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, nbmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, gp, d),
+                         lambda s_, h_, j, bt, ln: (s_, h_, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda s_, h_, j, bt, ln: (bt[s_, j], 0, h_, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda s_, h_, j, bt, ln: (bt[s_, j], 0, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, gp, d),
+                               lambda s_, h_, j, bt, ln: (s_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((gp,), jnp.float32),
+            pltpu.VMEM((gp,), jnp.float32),
+            pltpu.VMEM((gp, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, gp, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, q, k_pool, v_pool)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the paged flash-decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_decode_ref(q, k_pool, v_pool, block_tables, lengths):
+    """q (b, h, d); k/v_pool (n_blocks, bs, kvh, d);
+    block_tables (b, nbmax) int32; lengths (b,) int32 -> (b, h, d).
+
+    Gathers each sequence's blocks in table order (logical position of
+    slot ``j`` entry ``o`` is ``j * bs + o``), masks positions past
+    ``lengths``, and runs a dense fp32 softmax — the correctness oracle
+    for the fragmented-block-table gather in the kernel.
+    """
+    b, h, d = q.shape
+    bs, kvh = k_pool.shape[1], k_pool.shape[2]
+    group = h // kvh
+    # (b, nbmax, bs, kvh, d) -> (b, S, kvh, d), S = nbmax * bs
+    k = k_pool[block_tables].reshape(b, -1, kvh, d)
+    v = v_pool[block_tables].reshape(b, -1, kvh, d)
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    valid = jnp.arange(k.shape[1])[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

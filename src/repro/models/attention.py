@@ -227,3 +227,44 @@ def decode_attention(cfg, q, cache_k, cache_v, index):
     s = jnp.where(valid[None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     return jnp.einsum("bhqs,bshk->bqhk", w, v)
+
+
+# ---------------------------- paged KV cache --------------------------------
+
+
+def paged_cache_update(k_pool, v_pool, k_new, v_new, slots):
+    """Scatter one new token per sequence into a block-paged pool.
+
+    k_pool/v_pool: (n_blocks, bs, kv, hd); k_new/v_new: (b, 1, kv, hd);
+    slots: (b,) int32 flat pool indices ``block_id * bs + offset``.  Idle
+    engine slots point at the reserved scratch block (see
+    ``repro.serving.paged_cache``), so duplicate indices only ever
+    collide there.
+    """
+    nb, bs, kvh, hd = k_pool.shape
+    kf = k_pool.reshape(nb * bs, kvh, hd)
+    vf = v_pool.reshape(nb * bs, kvh, hd)
+    kf = kf.at[slots].set(k_new[:, 0].astype(kf.dtype))
+    vf = vf.at[slots].set(v_new[:, 0].astype(vf.dtype))
+    return kf.reshape(nb, bs, kvh, hd), vf.reshape(nb, bs, kvh, hd)
+
+
+def paged_decode_attention(cfg, q, k_pool, v_pool, block_tables, lengths,
+                           *, impl=None):
+    """One-token attention against a block-paged pool (flash-decode).
+
+    q: (b, 1, h, hd); k_pool/v_pool: (n_blocks, bs, kv, hd);
+    block_tables: (b, nbmax) int32; lengths: (b,) int32 counting valid
+    cache positions *including* the token just written.  ``impl``
+    (default ``cfg.attn_impl``) dispatches like ``attention_core``:
+    "auto" compiles the Pallas kernel on TPU and uses the jnp gather ref
+    elsewhere; "kernel"/"interpret"/"ref" force a path.
+    """
+    if impl is None:
+        impl = getattr(cfg, "attn_impl", "auto")
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    from repro.kernels.flash_decode import flash_decode
+    o = flash_decode(q[:, 0], k_pool, v_pool, block_tables, lengths,
+                     impl=impl)
+    return o[:, None].astype(q.dtype)

@@ -23,7 +23,8 @@ from repro.models.common import (apply_norm, cross_entropy, norm_defs,
                                  sinusoidal_positions)
 from repro.models.params import init_tree, p, shape_tree
 from repro.models.transformer import (decode_layer, dense_layer, layer_defs,
-                                      prefill_layer, stack_defs, _sub)
+                                      paged_decode_layer, prefill_layer,
+                                      stack_defs, _sub)
 from repro.parallel.axes import shard_act
 
 WHISPER_DECODE_ENC_FRAMES = 1500
@@ -235,6 +236,55 @@ class DecoderLM(BaseLM):
 
         logits = self._logits(params, x)[:, 0]
         return {"k": ck, "v": cv, "index": index + 1}, logits
+
+    def paged_decode_step(self, params, pools, block_tables, lengths,
+                          tokens):
+        """Continuous-batching decode step against a block-paged KV pool.
+
+        pools: {"k"/"v": (L, n_blocks, bs, kv, hd)}; block_tables
+        (b, nbmax) int32; lengths (b,) int32; tokens (b,) int32 —
+        ``tokens[i]`` is written at logical position ``lengths[i]`` of
+        sequence ``i``.  Unlike ``decode_step`` there is no shared
+        scalar ``index``: every slot advances at its own length, which
+        is what lets new requests join a running batch.  Returns
+        (pools', logits (b, V)).
+        """
+        cfg = self.cfg
+        x = self._embed(params, tokens)[:, None, :]
+        bs = pools["k"].shape[2]
+        blk = jnp.take_along_axis(block_tables, (lengths // bs)[:, None],
+                                  axis=1)[:, 0]
+        slots = blk * bs + lengths % bs
+
+        if self.is_moe:
+            def body(carry, inp):
+                x, aux = carry
+                lp, kp, vp = inp
+                h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
+                q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h,
+                                           positions=lengths[:, None])
+                kp, vp = attn.paged_cache_update(kp, vp, k, v, slots)
+                o = attn.paged_decode_attention(cfg, q, kp, vp,
+                                                block_tables, lengths + 1)
+                x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
+                h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
+                y, a = moe_mod.apply_moe(cfg, _sub(lp, "moe_"), h,
+                                         group_size=self.moe_group)
+                return (x + y, aux + a), (kp, vp)
+            (x, _), (kp, vp) = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)),
+                (params["layers"], pools["k"], pools["v"]))
+        else:
+            def body(x, inp):
+                lp, kp, vp = inp
+                x, kp, vp = paged_decode_layer(cfg, lp, x, kp, vp,
+                                               block_tables, lengths, slots)
+                return x, (kp, vp)
+            x, (kp, vp) = jax.lax.scan(
+                body, x, (params["layers"], pools["k"], pools["v"]))
+
+        logits = self._logits(params, x)[:, 0]
+        return {"k": kp, "v": vp}, logits
 
     # ---- specs ----
 

@@ -105,6 +105,27 @@ def decode_layer(cfg, lp, x, ck, cv, index, *, cross_kv=None):
     return x, ck, cv
 
 
+def paged_decode_layer(cfg, lp, x, k_pool, v_pool, block_tables, lengths,
+                       slots):
+    """One-token decode against a block-paged KV pool.
+
+    x (b, 1, d); k_pool/v_pool (n_blocks, bs, kv, hd); ``lengths`` (b,)
+    is each sequence's cache occupancy before this token, so the new
+    token's RoPE position is ``lengths`` and it lands at flat pool index
+    ``slots`` (computed once by the caller, shared across layers).
+    """
+    h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
+    q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h,
+                               positions=lengths[:, None])
+    k_pool, v_pool = attn.paged_cache_update(k_pool, v_pool, k, v, slots)
+    o = attn.paged_decode_attention(cfg, q, k_pool, v_pool, block_tables,
+                                    lengths + 1)
+    x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
+    h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
+    x = x + apply_mlp(cfg, lp, h, prefix="mlp_")
+    return x, k_pool, v_pool
+
+
 def prefill_layer(cfg, lp, x, *, positions=None):
     """Forward + return this layer's full K/V for the cache."""
     h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")

@@ -19,6 +19,7 @@ import io
 
 import jax
 import jax.numpy as jnp
+import ml_dtypes
 import msgpack
 import numpy as np
 
@@ -26,6 +27,15 @@ import numpy as np
 def _prefix_key(tokens: np.ndarray) -> str:
     h = hashlib.sha256(np.ascontiguousarray(tokens, np.int32).tobytes())
     return h.hexdigest()[:32]
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a stored dtype string, including the extended dtypes numpy
+    doesn't know by name (bfloat16, float8_e4m3fn, ...) via ml_dtypes."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
 
 
 def _pack_tree(tree) -> bytes:
@@ -47,12 +57,35 @@ def _unpack_tree(raw: bytes, template):
     assert payload["n"] == len(leaves), "cache layout mismatch"
     out = []
     for rec, tmpl in zip(payload["leaves"], leaves):
-        stored = (jnp.bfloat16 if rec["dtype"] == "bfloat16"
-                  else np.dtype(rec["dtype"]))
-        arr = np.frombuffer(rec["data"], dtype=stored).reshape(rec["shape"])
+        arr = np.frombuffer(rec["data"],
+                            dtype=_np_dtype(rec["dtype"])).reshape(
+                                rec["shape"])
         out.append(jnp.asarray(arr, dtype=tmpl.dtype))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(template), out)
+
+
+def grow_cache_geometric(cache, extra: int):
+    """Grow attention caches (the (L, b, S, kv, hd) 5-D leaves)
+    geometrically: double the seq capacity until it covers index+extra.
+    Doubling keeps the number of re-allocations (and distinct
+    decode_step compilations) O(log len) over a long decode, where
+    growing by ``extra`` per call is O(steps) in both.  Slack positions
+    are masked by ``decode_attention``, so outputs are unchanged."""
+    needed = int(jax.device_get(cache["index"])) + extra
+
+    def grow(x):
+        if hasattr(x, "ndim") and x.ndim == 5:
+            cur = x.shape[2]
+            cap = max(cur, 1)
+            while cap < needed:
+                cap *= 2
+            if cap > cur:
+                pad = [(0, 0)] * 5
+                pad[2] = (0, cap - cur)
+                return jnp.pad(x, pad)
+        return x
+    return jax.tree_util.tree_map(grow, cache)
 
 
 class KVContextCache:
@@ -83,33 +116,58 @@ class BatchServer:
 
     Requests whose prefix is cached skip prefill entirely (the paper's
     10x serving-cost claim lives exactly here: prefill is O(L * s * N),
-    restore is O(cache bytes))."""
+    restore is O(cache bytes)).
+
+    Two decode paths, selected by ``cfg.decode_impl`` (or the
+    ``decode_impl`` override):
+
+    * ``"dense"`` — the original lockstep batch decode against one
+      contiguous cache; works for every model family.
+    * ``"paged"`` — routes the batch through
+      ``repro.serving.ServingEngine``: block-paged KV, continuous
+      batching, flash-decode kernel, and block-reference prefix reuse
+      in place of the dense 3FS round-trip (attention-cache families
+      only)."""
 
     def __init__(self, model, params, context_cache: KVContextCache | None,
-                 *, gen_slots: int = 32):
+                 *, gen_slots: int = 32, decode_impl: str | None = None,
+                 engine_kwargs: dict | None = None):
         self.model = model
         self.params = params
         self.ctx = context_cache
         self.gen_slots = gen_slots
+        self.decode_impl = decode_impl or getattr(
+            getattr(model, "cfg", None), "decode_impl", "dense")
+        self._engine = None
+        self._engine_kwargs = engine_kwargs or {}
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
 
     def _grow(self, cache, extra):
-        def grow(x):
-            if hasattr(x, "ndim") and x.ndim == 5:
-                pad = [(0, 0)] * 5
-                pad[2] = (0, extra)
-                return jnp.pad(x, pad)
-            return x
-        return jax.tree_util.tree_map(grow, cache)
+        return grow_cache_geometric(cache, extra)
 
     def _prefill_batch(self, batch: dict):
         cache, logits = self._prefill(self.params, batch)
         return cache, logits
 
+    def _serve_paged(self, batch: dict, gen: int):
+        from repro.serving import ServingEngine
+        if self._engine is None:
+            kw = dict(max_slots=self.gen_slots)
+            kw.update(self._engine_kwargs)
+            self._engine = ServingEngine(self.model, self.params, **kw)
+        rids = [self._engine.submit(row, gen)
+                for row in np.asarray(batch["tokens"])]
+        outs = self._engine.run()
+        info = {"hit_rate": self._engine.cache.hit_rate,
+                **self._engine.stats}
+        return np.stack([outs[r] for r in rids]), info
+
     def serve(self, batch: dict, gen: int = 16):
         """batch: model-format prefill inputs. Returns (tokens (b, gen),
         info)."""
+        if self.decode_impl == "paged":
+            return self._serve_paged(batch, gen)
         tokens_np = np.asarray(batch["tokens"])
         restored = None
         if self.ctx is not None:

@@ -1,0 +1,18 @@
+"""Paged-KV serving: continuous batching + block-paged flash decode.
+
+The serving-side growth path for the paper's §VI-B4 story: a
+block-paged KV cache with refcounted prefix sharing
+(``paged_cache.PagedKVCache``), a continuous-batching engine with
+per-step admission/eviction and length-bucketed step functions
+(``engine.ServingEngine``), and — one level down — the fused Pallas
+flash-decode kernel (``repro.kernels.flash_decode``) that gathers
+blocks through the table during the online-softmax pass.
+
+``serve_lib.BatchServer`` dispatches here when
+``cfg.decode_impl == "paged"``; the dense lockstep path remains the
+fallback for families without an attention KV cache.
+"""
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.paged_cache import PagedKVCache
+
+__all__ = ["PagedKVCache", "Request", "ServingEngine"]

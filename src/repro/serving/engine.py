@@ -1,0 +1,301 @@
+"""Continuous-batching decode engine over the paged KV cache.
+
+``ServingEngine`` keeps a fixed number of decode *slots* (the jitted
+step's batch dimension) and a FIFO request queue.  Each engine step:
+
+1. **admits** queued requests into free slots — prefilling their prompt
+   (or restoring it by block reference on a prefix-cache hit) and
+   scattering the K/V into freshly allocated blocks;
+2. runs **one fused decode step for every occupied slot at once** via
+   ``model.paged_decode_step``: per-slot lengths and block tables mean
+   a request that joined this step decodes beside one that is 500
+   tokens deep — no lockstep, no re-prefill of the running batch;
+3. **retires** finished requests, returning their blocks to the pool.
+
+Compilation discipline: the step function's shapes depend only on
+(max_slots, table_width).  Table width is bucketed to powers of two, so
+admitting/retiring requests or growing sequences re-uses one of
+O(log n_blocks) compiled variants instead of recompiling per step —
+the "length-bucketed step functions" the dense path cannot offer
+(its cache is one contiguous array whose length bakes into the jit).
+Idle slots point at the scratch block with length 0; their logits are
+garbage and ignored.
+
+Prompt prefill runs unbucketed (one jit per distinct prompt length):
+bucketing prefill needs position-indexed last-token logits, which the
+model API does not expose — noted in ROADMAP.
+
+Eviction: ``evict(rid)`` (or pool exhaustion mid-decode) frees a
+running request's blocks and re-queues it from scratch; greedy decode
+is deterministic, so a re-admitted request reproduces the same tokens
+— and usually re-enters through the prefix cache instead of a full
+prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.paged_cache import PagedKVCache
+
+_PAGED_FAMILIES = ("dense", "moe")
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                 # (s,) int32 token ids
+    max_new_tokens: int
+    arrival: int = 0                   # earliest admissible engine step
+    rid: int = -1
+    # -- runtime state (engine-owned) --
+    tokens: list = dataclasses.field(default_factory=list)   # generated
+    blocks: list = dataclasses.field(default_factory=list)   # block table
+    length: int = 0                    # cache occupancy (tokens written)
+    slot: int = -1
+    admitted_at: int = -1
+    status: str = "queued"             # queued | running | done
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new_tokens
+
+
+class ServingEngine:
+    def __init__(self, model, params, *, n_blocks: int = 256,
+                 block_size: int = 16, max_slots: int = 4,
+                 pool_dtype: str = "bfloat16", share_prefixes: bool = True,
+                 min_table_width: int = 2):
+        cfg = model.cfg
+        if cfg.family not in _PAGED_FAMILIES:
+            raise ValueError(
+                f"paged serving needs a per-layer attention KV cache; "
+                f"family {cfg.family!r} is unsupported (use decode_impl="
+                f"'dense')")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.share_prefixes = share_prefixes
+        # Floor for the bucketed block-table width: size it to the
+        # expected max context to pin the step to one compiled shape
+        # (e.g. benchmarking, or latency-critical serving).
+        self.min_table_width = min_table_width
+        self.cache = PagedKVCache(
+            layers=cfg.n_layers, n_blocks=n_blocks, block_size=block_size,
+            kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            dtype=pool_dtype)
+        self._prefill = jax.jit(model.prefill)
+        # Donate the pools where donation works (accelerators): the step
+        # updates one token per slot, so without buffer aliasing XLA
+        # would copy the whole O(pool) cache every step.  CPU rejects
+        # donation with a warning, so keep it off there.
+        donate = (1,) if jax.default_backend() in ("tpu", "gpu") else ()
+        self._step = jax.jit(model.paged_decode_step, donate_argnums=donate)
+        self._slots: list[Request | None] = [None] * max_slots
+        self._queue: list[Request] = []
+        self._done: dict[int, Request] = {}
+        self._next_rid = 0
+        self._admission_seq = 0    # monotone: exact FIFO eviction priority
+        self.step_count = 0
+        self.evictions = 0
+
+    # ------------------------------- intake --------------------------------
+
+    def submit(self, prompt, max_new_tokens: int, arrival: int = 0) -> int:
+        req = Request(prompt=np.asarray(prompt, np.int32).reshape(-1),
+                      max_new_tokens=max_new_tokens, arrival=arrival,
+                      rid=self._next_rid)
+        self._next_rid += 1
+        self._queue.append(req)
+        return req.rid
+
+    # ------------------------------ admission ------------------------------
+
+    def _admit(self) -> None:
+        """FIFO admission: prefill-or-restore into free slots while the
+        pool can hold the prompt (strict order — no head-of-line skip,
+        so admission latency stays predictable)."""
+        while self._queue and None in self._slots:
+            req = self._queue[0]
+            if req.arrival > self.step_count:
+                break
+            if not self._start(req):
+                break
+            self._queue.pop(0)
+
+    def _start(self, req: Request) -> bool:
+        cache = self.cache
+        s = len(req.prompt)
+        restored = (cache.lookup_prefix(req.prompt)
+                    if self.share_prefixes else None)
+        if restored is not None:
+            blocks, length, first = restored
+        else:
+            n = cache.blocks_for(s)
+            if cache.num_free < n:
+                cache.reclaim(n)
+            blocks = cache.alloc(n)
+            if blocks is None:
+                return False
+            dense, logits = self._prefill(self.params,
+                                          {"tokens": jnp.asarray(
+                                              req.prompt[None])})
+            # (L, b=1, s, kv, hd) -> (L, s, kv, hd)
+            cache.write_prompt(dense["k"][:, 0], dense["v"][:, 0], blocks)
+            first = int(jnp.argmax(logits[0]))
+            length = s
+            if self.share_prefixes:
+                cache.register_prefix(req.prompt, blocks, s, first)
+        req.blocks = blocks
+        req.length = length
+        req.tokens = [first]
+        if req.done:        # max_new_tokens == 1: the prefill was enough
+            cache.free(blocks)
+            req.blocks, req.status = [], "done"
+            self._done[req.rid] = req
+            return True
+        req.slot = self._slots.index(None)
+        self._admission_seq += 1   # ties would invert FIFO preemption
+        req.admitted_at = self._admission_seq
+        req.status = "running"
+        self._slots[req.slot] = req
+        return True
+
+    # ------------------------------- decode --------------------------------
+
+    def _bucket(self, n: int) -> int:
+        w = max(self.min_table_width, 2)
+        while w < n:
+            w *= 2
+        return w
+
+    def _ensure_block(self, req: Request) -> bool:
+        """Make sure the block table covers the next write position."""
+        if req.length // self.cache.block_size < len(req.blocks):
+            return True
+        if self.cache.num_free < 1:
+            self.cache.reclaim(1)
+        got = self.cache.alloc(1)
+        if got is None:
+            return False
+        req.blocks.extend(got)
+        return True
+
+    def _evict_for_space(self, needy: Request) -> bool:
+        """Pool exhausted mid-decode: preempt the *youngest* running
+        request — possibly ``needy`` itself — back to the queue.  The
+        oldest admission is never preempted by younger ones, so it
+        monotonically runs to completion and frees its blocks: FIFO-
+        priority preemption cannot livelock (evicting only "others"
+        can ping-pong two requests that jointly exceed the pool
+        forever).  False iff ``needy`` is the sole runner — then the
+        pool simply cannot hold one request and the caller raises."""
+        running = [r for r in self._slots if r is not None]
+        if running == [needy]:
+            return False
+        self.evict(max(running, key=lambda r: r.admitted_at).rid)
+        return True
+
+    def evict(self, rid: int) -> None:
+        """Free a running request's blocks and restart it from the queue
+        (deterministic greedy decode -> identical tokens on re-entry)."""
+        for slot, req in enumerate(self._slots):
+            if req is not None and req.rid == rid:
+                self._slots[slot] = None
+                self.cache.free(req.blocks)
+                req.blocks, req.tokens, req.length = [], [], 0
+                req.slot, req.status = -1, "queued"
+                req.arrival = self.step_count
+                self._queue.insert(0, req)
+                self.evictions += 1
+                return
+        raise KeyError(f"request {rid} is not running")
+
+    def step(self) -> int:
+        """Admit, decode one token for every running request, retire.
+        Returns the number of tokens produced."""
+        self._admit()
+        active = [r for r in self._slots if r is not None]
+        if not active:
+            if (self._queue
+                    and self._queue[0].arrival <= self.step_count):
+                raise RuntimeError(
+                    f"request {self._queue[0].rid} cannot be admitted even "
+                    f"into an empty engine: prompt needs "
+                    f"{self.cache.blocks_for(len(self._queue[0].prompt))} "
+                    f"blocks, pool has {self.cache.num_free} free")
+            self.step_count += 1
+            return 0
+        # Walk slots (not a snapshot): _evict_for_space can clear any
+        # slot mid-loop, and an evicted request must not be handed a
+        # block it would never free.
+        for slot in range(self.max_slots):
+            req = self._slots[slot]
+            if req is None:
+                continue
+            while self._slots[slot] is req and not self._ensure_block(req):
+                if not self._evict_for_space(req):
+                    raise RuntimeError(
+                        f"KV pool exhausted: request {req.rid} needs a "
+                        f"block and nothing is evictable")
+        active = [r for r in self._slots if r is not None]
+
+        width = self._bucket(max(len(r.blocks) for r in active))
+        tables = np.zeros((self.max_slots, width), np.int32)
+        lengths = np.zeros(self.max_slots, np.int32)
+        tokens = np.zeros(self.max_slots, np.int32)
+        for r in active:
+            tables[r.slot, :len(r.blocks)] = r.blocks
+            lengths[r.slot] = r.length
+            tokens[r.slot] = r.tokens[-1]
+
+        pools = {"k": self.cache.k, "v": self.cache.v}
+        pools, logits = self._step(self.params, pools,
+                                   jnp.asarray(tables),
+                                   jnp.asarray(lengths),
+                                   jnp.asarray(tokens))
+        self.cache.k, self.cache.v = pools["k"], pools["v"]
+        # argmax on device: ship (max_slots,) int32 to host, not the
+        # (max_slots, vocab) logits
+        next_toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+        produced = 0
+        for r in active:
+            r.length += 1
+            r.tokens.append(int(next_toks[r.slot]))
+            produced += 1
+            if r.done:
+                self._slots[r.slot] = None
+                self.cache.free(r.blocks)
+                r.slot, r.status = -1, "done"
+                self._done[r.rid] = r
+        self.step_count += 1
+        return produced
+
+    # -------------------------------- drive --------------------------------
+
+    def run(self, max_steps: int = 100_000) -> dict[int, np.ndarray]:
+        """Step until queue and slots drain; {rid: (max_new_tokens,)}."""
+        for _ in range(max_steps):
+            if not self._queue and all(s is None for s in self._slots):
+                break
+            self.step()
+        else:
+            raise RuntimeError("serving trace did not drain")
+        out = {rid: np.asarray(req.tokens[:req.max_new_tokens], np.int32)
+               for rid, req in self._done.items()}
+        self._done.clear()      # a long-lived server must not retain
+        return out              # every historical request
+
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "steps": self.step_count,
+            "evictions": self.evictions,
+            "prefix_hit_rate": self.cache.hit_rate,
+            "free_blocks": self.cache.num_free,
+        }

@@ -1,0 +1,207 @@
+"""Paged KV cache: fixed-size blocks, block tables, refcounted sharing.
+
+The decode KV cache lives in two device pools of shape
+(layers, n_blocks, block_size, kv_heads, head_dim); a sequence owns an
+ordered list of physical block ids (its *block table*) and logical
+position ``p`` lives at block ``table[p // bs]``, offset ``p % bs``.
+This is the vLLM/PagedAttention layout, which is also what the paper's
+serving story needs: KV capacity is the binding constraint at scale
+(§VI-B4; arXiv:2505.09343 §KV), and paging turns "longest request
+reserves worst-case memory for everyone" into "every request holds
+exactly ``ceil(len / bs)`` blocks".
+
+Three host-side mechanisms around the device pools:
+
+* **free-list allocator** — LIFO over block ids 1..n_blocks-1.  Block 0
+  is reserved as a scratch block: idle engine slots point their table
+  (and therefore their token writes) at it, so the jitted decode step
+  never needs a batch-size-dependent active mask.
+* **refcounts** — a block returns to the free list only when its last
+  owner drops it, which is what makes prefix sharing safe: a prefix
+  entry and any number of live sequences can reference the same block.
+* **prefix index** — rolling-hash(token prefix) -> (block ids, length,
+  first greedy token).  A hit *restores by block reference*: full
+  blocks are shared via incref, and only the trailing partial block is
+  copied (the new sequence appends into it — copy-on-write).  The
+  registering sequence keeps appending its own decode tokens into its
+  partial tail block, but only at offsets >= length, which a restored
+  sequence masks (attention is masked to ``< length``) and then
+  overwrites as it decodes — so registration never blocks the owner.
+  Contrast ``serve_lib.KVContextCache``, which round-trips the whole
+  dense cache through 3FS bytes; here a hit is O(1 block copy).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# One prefix-identity function across the serving stack: the paged index
+# and the 3FS context cache must agree on what "same prompt" means.
+from repro.serve_lib import _prefix_key
+
+
+# Donate the pools where donation works so admissions/COW copies update
+# in place instead of rewriting O(pool) HBM; CPU rejects donation with a
+# warning, so keep it off there.  Callers immediately rebind self.k/v.
+_DONATE = (0, 1) if jax.default_backend() in ("tpu", "gpu") else ()
+
+
+@functools.partial(jax.jit, donate_argnums=_DONATE)
+def _scatter_blocks(k_pool, v_pool, k, v, block_ids):
+    """Write dense prefill K/V (L, nblk*bs, kv, hd) into pool blocks."""
+    L, nb, bs, kvh, hd = k_pool.shape
+    kb = k.reshape(L, -1, bs, kvh, hd).astype(k_pool.dtype)
+    vb = v.reshape(L, -1, bs, kvh, hd).astype(v_pool.dtype)
+    return k_pool.at[:, block_ids].set(kb), v_pool.at[:, block_ids].set(vb)
+
+
+@functools.partial(jax.jit, donate_argnums=_DONATE)
+def _copy_block(k_pool, v_pool, src, dst):
+    return (k_pool.at[:, dst].set(k_pool[:, src]),
+            v_pool.at[:, dst].set(v_pool[:, src]))
+
+
+class PagedKVCache:
+    """Device block pools + host allocator/refcounts/prefix index."""
+
+    def __init__(self, *, layers: int, n_blocks: int, block_size: int,
+                 kv_heads: int, head_dim: int, dtype: str = "bfloat16"):
+        assert n_blocks >= 2, "need at least scratch + 1 allocatable block"
+        shape = (layers, n_blocks, block_size, kv_heads, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.refcount = np.zeros(n_blocks, np.int64)
+        self.refcount[0] = 1                       # scratch, never freed
+        self._free = list(range(n_blocks - 1, 0, -1))   # pop() -> low ids
+        self._prefix: dict[str, tuple[tuple[int, ...], int, int]] = {}
+        self._prefix_lru: list[str] = []
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------ allocator ------------------------------
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """n fresh blocks at refcount 1, or None if the pool is exhausted
+        (caller decides: reclaim prefixes, evict, or wait)."""
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self.refcount[ids] = 1
+        return ids
+
+    def incref(self, ids) -> None:
+        for i in ids:
+            self.refcount[i] += 1
+
+    def free(self, ids) -> None:
+        """Drop one reference per id; exhausted blocks rejoin the free
+        list (their stale K/V needs no scrubbing — readers mask by
+        length and writers overwrite before extending it)."""
+        for i in ids:
+            self.refcount[i] -= 1
+            assert self.refcount[i] >= 0, f"double free of block {i}"
+            if self.refcount[i] == 0:
+                self._free.append(i)
+
+    # ---------------------------- device writes ----------------------------
+
+    def write_prompt(self, k, v, block_ids) -> None:
+        """Scatter fresh prefill K/V (L, s, kv, hd) into ``block_ids``."""
+        bs = self.block_size
+        s = k.shape[1]
+        pad = -s % bs
+        if pad:
+            cfgpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+            k = jnp.pad(k, cfgpad)
+            v = jnp.pad(v, cfgpad)
+        ids = jnp.asarray(block_ids, jnp.int32)
+        self.k, self.v = _scatter_blocks(self.k, self.v, k, v, ids)
+
+    def copy_block(self, src: int) -> int | None:
+        """Copy-on-write: duplicate one block into a fresh allocation."""
+        dst = self.alloc(1)
+        if dst is None:
+            return None
+        self.k, self.v = _copy_block(self.k, self.v, src, dst[0])
+        return dst[0]
+
+    # --------------------------- prefix sharing ----------------------------
+
+    def register_prefix(self, tokens: np.ndarray, block_ids, length: int,
+                        first_token: int) -> None:
+        """Pin ``block_ids`` (incref) under the prefix hash so later
+        identical prompts restore by reference.  ``first_token`` is the
+        greedy continuation from the prefill logits — the one piece of
+        state a block-level restore cannot reconstruct."""
+        key = _prefix_key(tokens)
+        if key in self._prefix:
+            return
+        self.incref(block_ids)
+        self._prefix[key] = (tuple(block_ids), length, first_token)
+        self._prefix_lru.append(key)
+
+    def lookup_prefix(self, tokens: np.ndarray):
+        """Exact-prefix hit -> (block_ids, length, first_token) with the
+        new sequence holding its own references; None on miss.
+
+        Full blocks are shared (incref).  A partial trailing block is
+        copied because the restored sequence will append into it; if the
+        prompt ends exactly on a block boundary every block is shared
+        and the first decode token opens a fresh block anyway.
+        """
+        key = _prefix_key(tokens)
+        ent = self._prefix.get(key)
+        if ent is None:
+            self.misses += 1
+            return None
+        ids, length, first_token = ent
+        if length % self.block_size == 0:
+            self.incref(ids)
+            blocks = list(ids)
+        else:
+            tail = self.copy_block(ids[-1])
+            if tail is None:
+                # exhausted pool: drop other LRU prefixes before giving
+                # up a restore that needs exactly one block
+                self.reclaim(1, keep=(key,))
+                tail = self.copy_block(ids[-1])
+            if tail is None:
+                self.misses += 1
+                return None
+            self.incref(ids[:-1])
+            blocks = list(ids[:-1]) + [tail]
+        self.hits += 1
+        if key in self._prefix_lru:     # refresh LRU position
+            self._prefix_lru.remove(key)
+            self._prefix_lru.append(key)
+        return blocks, length, first_token
+
+    def reclaim(self, n_blocks: int, *, keep: tuple = ()) -> bool:
+        """Release LRU prefix entries until ``n_blocks`` are allocatable.
+        Entries named in ``keep`` are spared (e.g. the prefix currently
+        being restored, whose blocks must not be decref'd mid-restore)."""
+        while self.num_free < n_blocks:
+            key = next((k for k in self._prefix_lru if k not in keep), None)
+            if key is None:
+                break
+            self._prefix_lru.remove(key)
+            ids, _, _ = self._prefix.pop(key)
+            self.free(ids)
+        return self.num_free >= n_blocks
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

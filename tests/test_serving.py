@@ -1,0 +1,238 @@
+"""Paged-KV serving engine: paged vs dense decode equivalence, continuous
+batching (staggered arrivals + eviction), block-table fragmentation,
+prefix-share restore, and the PagedKVCache allocator invariants."""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.data.synthetic import batch_for_model
+from repro.models import build_model
+from repro.serve_lib import BatchServer
+from repro.serving import PagedKVCache, ServingEngine
+
+GEN = 6
+PROMPT = 18          # deliberately not a block multiple
+
+
+def _build(arch="codeqwen1.5-7b", **over):
+    cfg = dc.replace(smoke_config(arch), n_layers=2,
+                     compute_dtype="float32", **over)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    return _build()
+
+
+def _prompts(cfg, n, seed=0, length=PROMPT):
+    batch = batch_for_model(cfg, "prefill", seed, n, length)
+    return np.asarray(batch["tokens"], np.int32)
+
+
+def _dense_ref(model, params, prompts, gen=GEN):
+    """Per-request dense decode — the oracle a continuous-batching trace
+    must reproduce token-for-token."""
+    srv = BatchServer(model, params, None)
+    return [srv.serve({"tokens": jnp.asarray(row[None])}, gen=gen)[0][0]
+            for row in prompts]
+
+
+# ------------------------- paged == dense tokens ---------------------------
+
+
+@pytest.mark.parametrize("block_size", [16, 64])
+@pytest.mark.parametrize("n_kv_heads", [1, 2, 4])
+def test_paged_matches_dense(block_size, n_kv_heads):
+    cfg, model, params = _build(n_kv_heads=n_kv_heads)
+    prompts = _prompts(cfg, 3)
+    ref = _dense_ref(model, params, prompts)
+    eng = ServingEngine(model, params, n_blocks=24, block_size=block_size,
+                        max_slots=3)
+    rids = [eng.submit(row, GEN) for row in prompts]
+    outs = eng.run()
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(ref[i], outs[rid])
+
+
+def test_paged_matches_dense_moe():
+    cfg, model, params = _build("qwen2-moe-a2.7b")
+    prompts = _prompts(cfg, 2)
+    ref = _dense_ref(model, params, prompts, gen=4)
+    eng = ServingEngine(model, params, n_blocks=16, block_size=16,
+                        max_slots=2)
+    rids = [eng.submit(row, 4) for row in prompts]
+    outs = eng.run()
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(ref[i], outs[rid])
+
+
+# -------------------- continuous batching acceptance trace -----------------
+
+
+def test_staggered_arrivals_with_eviction(dense_setup):
+    """Multi-request trace: requests join a *running* decode batch at
+    staggered steps, one gets evicted mid-flight and restarts — every
+    request must still reproduce its dense-path tokens exactly."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, 4)
+    ref = _dense_ref(model, params, prompts)
+    eng = ServingEngine(model, params, n_blocks=32, block_size=16,
+                        max_slots=2, share_prefixes=False)
+    rids = [eng.submit(row, GEN, arrival=i) for i, row in enumerate(prompts)]
+    eng.step()
+    eng.step()                       # r0/r1 mid-decode, r2/r3 queued
+    running = [r for r in eng._slots if r is not None]
+    assert len(running) == 2 and running[0].length != len(prompts[0])
+    eng.evict(running[1].rid)        # one eviction mid-trace
+    outs = eng.run()
+    assert eng.evictions == 1
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(ref[i], outs[rid])
+    assert eng.cache.num_free == eng.cache.n_blocks - 1   # all returned
+
+
+def test_batchserver_paged_dispatch(dense_setup):
+    """cfg.decode_impl='paged' routes BatchServer through the engine and
+    reproduces the dense BatchServer outputs."""
+    cfg, model, params = dense_setup
+    batch = {"tokens": jnp.asarray(_prompts(cfg, 3, seed=5))}
+    dense_out, _ = BatchServer(model, params, None).serve(batch, gen=GEN)
+    paged = BatchServer(model, params, None, decode_impl="paged",
+                        engine_kwargs=dict(n_blocks=32, block_size=16,
+                                           max_slots=3))
+    paged_out, info = paged.serve(batch, gen=GEN)
+    np.testing.assert_array_equal(dense_out, paged_out)
+    assert info["evictions"] == 0
+
+
+def test_eviction_cascade_under_pressure(dense_setup):
+    """A pool too small for both requests' steady state forces automatic
+    mid-decode evictions; the trace must still drain with dense-exact
+    tokens and no leaked blocks (regression: the block-allocation walk
+    once handed blocks to just-evicted requests and crashed when every
+    slot emptied)."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, 2, seed=21, length=15)
+    ref = _dense_ref(model, params, prompts, gen=8)
+    eng = ServingEngine(model, params, n_blocks=4, block_size=16,
+                        max_slots=2, share_prefixes=False)
+    rids = [eng.submit(row, 8) for row in prompts]
+    outs = eng.run()
+    assert eng.evictions >= 1
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(ref[i], outs[rid])
+    assert eng.cache.num_free == eng.cache.n_blocks - 1   # nothing leaked
+
+
+# --------------------------- fragmentation ---------------------------------
+
+
+def test_fragmented_block_table(dense_setup):
+    """After a round of completions/evictions the free list hands out
+    non-contiguous physical blocks; logical order must be preserved by
+    the table, so tokens still match the dense path."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, 3, seed=7)
+    ref = _dense_ref(model, params, prompts)
+    eng = ServingEngine(model, params, n_blocks=16, block_size=16,
+                        max_slots=2, share_prefixes=False)
+    # r0 runs alone to completion, seeding the free list out of order
+    r0 = eng.submit(prompts[0], GEN)
+    outs0 = eng.run()
+    np.testing.assert_array_equal(ref[0], outs0[r0])
+    # r1/r2 interleave allocations from the recycled + fresh blocks
+    r1 = eng.submit(prompts[1], GEN)
+    r2 = eng.submit(prompts[2], GEN)
+    eng.step()
+    tables = [list(r.blocks) for r in eng._slots if r is not None]
+    eng2_frag = any(bt != sorted(bt) or np.any(np.diff(bt) != 1)
+                    for bt in tables)
+    assert eng2_frag, f"expected fragmented tables, got {tables}"
+    outs = eng.run()
+    np.testing.assert_array_equal(ref[1], outs[r1])
+    np.testing.assert_array_equal(ref[2], outs[r2])
+
+
+# --------------------------- prefix sharing --------------------------------
+
+
+def test_prefix_share_restore(dense_setup):
+    """A repeated prompt restores by block reference: no second prefill
+    compile-or-copy of the dense cache, identical tokens."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, 1, seed=11)
+    ref = _dense_ref(model, params, prompts)
+    eng = ServingEngine(model, params, n_blocks=24, block_size=16,
+                        max_slots=2)
+    r0 = eng.submit(prompts[0], GEN)
+    outs = eng.run()
+    assert eng.cache.hits == 0 and eng.cache.misses == 1
+    r1 = eng.submit(prompts[0], GEN)
+    outs2 = eng.run()
+    assert eng.cache.hits == 1
+    np.testing.assert_array_equal(ref[0], outs[r0])
+    np.testing.assert_array_equal(ref[0], outs2[r1])
+
+
+def test_prefix_blocks_survive_owner(dense_setup):
+    """Registered prefix blocks stay allocated (refcounted) after the
+    registering request retires, and are reclaimable under pressure."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, 1, seed=13)
+    eng = ServingEngine(model, params, n_blocks=8, block_size=16,
+                        max_slots=1)
+    eng.submit(prompts[0], GEN)
+    eng.run()
+    held = eng.cache.n_blocks - 1 - eng.cache.num_free
+    assert held == eng.cache.blocks_for(PROMPT)   # prefix pins its blocks
+    assert eng.cache.reclaim(eng.cache.n_blocks - 1)
+    assert eng.cache.num_free == eng.cache.n_blocks - 1
+
+
+# ------------------------ whole pipeline through the kernel ----------------
+
+
+@pytest.mark.interpret
+def test_paged_engine_interpret_kernel():
+    """End-to-end engine trace with the Pallas flash-decode kernel in
+    interpret mode (attn_impl='interpret' also routes prefill through
+    the flash-attention kernel).  The dense oracle runs with the same
+    params and the same interpret prefill, so the only numerical delta
+    is flash-decode-kernel vs jnp decode attention."""
+    cfg, model, params = _build(attn_impl="interpret")
+    prompts = _prompts(cfg, 2)
+    ref = _dense_ref(model, params, prompts, gen=3)
+    eng = ServingEngine(model, params, n_blocks=16, block_size=16,
+                        max_slots=2)
+    rids = [eng.submit(row, 3) for row in prompts]
+    outs = eng.run()
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(ref[i], outs[rid])
+
+
+# ------------------------- allocator invariants ----------------------------
+
+
+def test_paged_cache_allocator():
+    cache = PagedKVCache(layers=1, n_blocks=8, block_size=4, kv_heads=1,
+                         head_dim=8)
+    a = cache.alloc(3)
+    b = cache.alloc(4)
+    assert sorted(a + b) == list(range(1, 8))     # block 0 reserved
+    assert cache.alloc(1) is None                 # exhausted
+    cache.incref(a)                               # shared reference
+    cache.free(a)
+    assert cache.num_free == 0                    # still referenced
+    cache.free(a)
+    assert cache.num_free == 3                    # now recycled
+    with pytest.raises(AssertionError):
+        cache.free([a[0]])                        # double free detected
+    cache.free(b)
+    assert cache.num_free == 7
