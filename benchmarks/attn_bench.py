@@ -26,7 +26,8 @@ ITEM = 4    # fp32 bytes
 
 
 def _cases():
-    if jax.default_backend() == "tpu":
+    if jax.default_backend() == "tpu" and \
+            os.environ.get("REPRO_BENCH_SMOKE") != "1":
         return dict(seqs=(1024, 2048, 4096), groups=(1, 4, 8),
                     b=4, h=16, d=128, impl="kernel", repeat=10)
     return dict(seqs=(128, 256), groups=(1, 2),

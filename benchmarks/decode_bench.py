@@ -31,7 +31,8 @@ KV_BYTES = 2     # bfloat16 pool/cache entries
 
 
 def _cases():
-    if jax.default_backend() == "tpu":
+    if jax.default_backend() == "tpu" and \
+            os.environ.get("REPRO_BENCH_SMOKE") != "1":
         return dict(batches=(8, 32), prompt=512, gen=64, block=64,
                     n_layers=4, repeat=20)
     return dict(batches=(2, 4), prompt=18, gen=6, block=16,

@@ -1,0 +1,171 @@
+"""Fused-backward suite: rmsnorm / ssd_scan / topk_gating fwd vs fwd+bwd.
+
+Per op: wall-clock for forward and forward+backward on (a) the jnp ref
+differentiated by jax autodiff and (b) the fused Pallas custom_vjp path,
+plus an analytic model of the HBM bytes each backward moves — the
+jnp-autodiff baseline stashes O(chunk^2) decay matrices (ssd), a dense
+(T, E) softmax + scatter (gating), or a normalized intermediate
+(rmsnorm), while the fused paths save O(row)/O(state) residuals.  Emits
+CSV rows and writes ``BENCH_grad.json``.
+
+On TPU the kernels run compiled; elsewhere they run in Pallas interpret
+mode on reduced shapes (wall-clock then measures the interpreter, so the
+JSON records backend + impl so consumers can tell the two apart).
+``REPRO_BENCH_SMOKE=1`` (the CI bench lane) forces the reduced shapes
+everywhere — the smoke lane checks import/API drift, not perf.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+OUT_PATH = os.environ.get("REPRO_BENCH_GRAD", "BENCH_grad.json")
+ITEM = 4    # fp32 bytes
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _cases():
+    if jax.default_backend() == "tpu" and not _smoke():
+        return dict(impl="kernel", repeat=10,
+                    rmsnorm=(8192, 4096), ssd=(4, 2048, 16, 64, 64, 256),
+                    gating=(16384, 64, 8))
+    return dict(impl="interpret", repeat=1,
+                rmsnorm=(512, 256), ssd=(1, 64, 2, 8, 4, 16),
+                gating=(512, 32, 4))
+
+
+def _time(fn, *args, repeat=1):
+    out = jax.block_until_ready(fn(*args))     # compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat * 1e6
+
+
+def _pair(name, ref_fwd, ker_fwd, ref_grad, ker_grad, args, repeat,
+          hbm_ref, hbm_kernel, impl, extra):
+    rec = {
+        "op": name, "impl": impl, **extra,
+        "fwd_us_ref": _time(ref_fwd, *args, repeat=repeat),
+        "fwd_us_kernel": _time(ker_fwd, *args, repeat=repeat),
+        "fwdbwd_us_ref": _time(ref_grad, *args, repeat=repeat),
+        "fwdbwd_us_kernel": _time(ker_grad, *args, repeat=repeat),
+        "bwd_hbm_bytes_ref": hbm_ref,
+        "bwd_hbm_bytes_kernel": hbm_kernel,
+    }
+    emit(f"grad.{name}.fwdbwd_ref", rec["fwdbwd_us_ref"], f"hbm={hbm_ref}")
+    emit(f"grad.{name}.fwdbwd_kernel", rec["fwdbwd_us_kernel"],
+         f"hbm={hbm_kernel} impl={impl}")
+    return rec
+
+
+def _bench_rmsnorm(cfg, rng):
+    from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+    n, d = cfg["rmsnorm"]
+    impl = cfg["impl"]
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+    ct = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    ref_fwd = jax.jit(lambda x, w: rmsnorm_ref(x, w))
+    ker_fwd = jax.jit(lambda x, w: rmsnorm(x, w, impl=impl))
+    ref_grad = jax.jit(jax.grad(
+        lambda x, w: jnp.sum(rmsnorm_ref(x, w) * ct), argnums=(0, 1)))
+    ker_grad = jax.jit(jax.grad(
+        lambda x, w: jnp.sum(rmsnorm(x, w, impl=impl) * ct), argnums=(0, 1)))
+    from repro.kernels.rmsnorm.ops import BLOCK_ROWS
+    io = n * d * ITEM
+    # ref bwd: reads x + dy, writes dx + the fp32 normalized intermediate
+    # autodiff stashes (write fwd + read bwd), reduces dw over a dense
+    # (n, d) product it re-materializes.
+    hbm_ref = 3 * io + 2 * io + io
+    # kernel bwd: reads x + dy + rstd, writes dx + per-block dw partials.
+    bn = min(BLOCK_ROWS, n)
+    hbm_kernel = 3 * io + 2 * n * ITEM + (-(-n // bn)) * d * ITEM
+    return _pair("rmsnorm", ref_fwd, ker_fwd, ref_grad, ker_grad, (x, w),
+                 cfg["repeat"], hbm_ref, hbm_kernel, impl,
+                 {"n": n, "d": d})
+
+
+def _bench_ssd(cfg, rng):
+    from repro.kernels.ssd_scan import ssd_ref, ssd_scan
+    b, l, h, p, n, chunk = cfg["ssd"]
+    impl = cfg["impl"]
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)) * 0.5, jnp.float32)
+    a = -jnp.abs(jnp.asarray(rng.standard_normal((b, l, h)) * 0.3,
+                             jnp.float32))
+    B = jnp.asarray(rng.standard_normal((b, l, n)) * 0.5, jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, l, n)) * 0.5, jnp.float32)
+    ct = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32)
+    ref_fwd = jax.jit(lambda *t: ssd_ref(*t, chunk)[0])
+    ker_fwd = jax.jit(lambda *t: ssd_scan(*t, chunk=chunk, impl=impl)[0])
+    ref_grad = jax.jit(jax.grad(
+        lambda *t: jnp.sum(ssd_ref(*t, chunk)[0] * ct),
+        argnums=(0, 1, 2, 3)))
+    ker_grad = jax.jit(jax.grad(
+        lambda *t: jnp.sum(ssd_scan(*t, chunk=chunk, impl=impl)[0] * ct),
+        argnums=(0, 1, 2, 3)))
+    nc = l // chunk
+    io = (2 * b * l * h * p + b * l * h + 2 * b * l * n) * ITEM  # x,y,a,B,C
+    # ref bwd: autodiff through the chunked scan stashes each chunk's
+    # (c, c, h) decay matrix + (c, c) scores (write fwd + read bwd) on top
+    # of re-reading the inputs and writing the four grads.
+    hbm_ref = 2 * io + 2 * b * nc * (chunk * chunk * h +
+                                     chunk * chunk) * ITEM
+    # kernel bwd: re-reads inputs + dy, writes grads, round-trips only the
+    # (nc, h, p, n) per-chunk incoming states.
+    hbm_kernel = 2 * io + 2 * b * nc * h * p * n * ITEM
+    return _pair("ssd_scan", ref_fwd, ker_fwd, ref_grad, ker_grad,
+                 (x, a, B, C), cfg["repeat"], hbm_ref, hbm_kernel, impl,
+                 {"b": b, "l": l, "h": h, "p": p, "n": n, "chunk": chunk})
+
+
+def _bench_gating(cfg, rng):
+    from repro.kernels.topk_gating import topk_gating, topk_gating_ref
+    T, E, k = cfg["gating"]
+    impl = cfg["impl"]
+    logits = jnp.asarray(rng.standard_normal((T, E)), jnp.float32)
+    ct = jnp.asarray(rng.standard_normal((T, k)), jnp.float32)
+    ref_fwd = jax.jit(lambda l: topk_gating_ref(l, k)[0])
+    ker_fwd = jax.jit(lambda l: topk_gating(l, k=k, impl=impl)[0])
+    ref_grad = jax.jit(jax.grad(
+        lambda l: jnp.sum(topk_gating_ref(l, k)[0] * ct)))
+    ker_grad = jax.jit(jax.grad(
+        lambda l: jnp.sum(topk_gating(l, k=k, impl=impl)[0] * ct)))
+    dense = T * E * ITEM
+    topk = T * k * ITEM
+    # ref bwd: the stashed dense softmax (write + read), a dense scatter
+    # of the top-k cotangents (write + read), dlogits write.
+    hbm_ref = 2 * dense + 2 * dense + dense + 2 * topk
+    # kernel bwd: re-reads logits + indices + dw, writes dlogits; the
+    # softmax is recomputed on-chip.
+    hbm_kernel = 2 * dense + 3 * topk
+    return _pair("topk_gating", ref_fwd, ker_fwd, ref_grad, ker_grad,
+                 (logits,), cfg["repeat"], hbm_ref, hbm_kernel, impl,
+                 {"T": T, "E": E, "k": k})
+
+
+def run():
+    cfg = _cases()
+    rng = np.random.default_rng(0)
+    records = [_bench_rmsnorm(cfg, rng), _bench_ssd(cfg, rng),
+               _bench_gating(cfg, rng)]
+    payload = {"backend": jax.default_backend(), "cases": records}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("grad.bench_written", 0, f"{OUT_PATH}({len(records)}cases)")
+    return {"ok": True, "cases": records}
+
+
+if __name__ == "__main__":
+    run()

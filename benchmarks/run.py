@@ -3,35 +3,51 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig7 fig9  # subset
+  PYTHONPATH=src python -m benchmarks.run attn decode grad --smoke
+                                                     # CI drift check
+
+``--smoke`` sets REPRO_BENCH_SMOKE=1 before any suite runs: the kernel
+suites (attn / decode / grad) drop to their reduced off-TPU shapes with
+repeat=1 regardless of backend.  The smoke lane exists to catch
+import/API drift, not to assert perf numbers — but a suite raising still
+fails the run (nonzero exit), which is what CI keys off.
 """
 from __future__ import annotations
 
+import os
 import sys
-
-from benchmarks import (attn_bench, decode_bench, fig7_allreduce,
-                        fig8_weakscaling, fig9_strongscaling, roofline,
-                        table2_costperf, table3_network, table6_failures)
-
-SUITES = {
-    "table2": table2_costperf.run,
-    "table3": table3_network.run,
-    "fig7": fig7_allreduce.run,
-    "fig8": fig8_weakscaling.run,
-    "fig9": fig9_strongscaling.run,
-    "table6": table6_failures.run,
-    "roofline": roofline.run,
-    "attn": attn_bench.run,
-    "decode": decode_bench.run,
-}
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(SUITES)
+    args = sys.argv[1:]
+    if "--smoke" in args:
+        args = [a for a in args if a != "--smoke"]
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
+    from benchmarks import (attn_bench, decode_bench, fig7_allreduce,
+                            fig8_weakscaling, fig9_strongscaling,
+                            grad_bench, roofline, table2_costperf,
+                            table3_network, table6_failures)
+
+    suites = {
+        "table2": table2_costperf.run,
+        "table3": table3_network.run,
+        "fig7": fig7_allreduce.run,
+        "fig8": fig8_weakscaling.run,
+        "fig9": fig9_strongscaling.run,
+        "table6": table6_failures.run,
+        "roofline": roofline.run,
+        "attn": attn_bench.run,
+        "decode": decode_bench.run,
+        "grad": grad_bench.run,
+    }
+
+    names = args or list(suites)
     print("name,us_per_call,derived")
     failures = 0
     for n in names:
         try:
-            out = SUITES[n]()
+            out = suites[n]()
             if isinstance(out, dict) and out.get("ok") is False:
                 failures += 1
         except Exception as e:  # keep the harness running
@@ -39,7 +55,7 @@ def main() -> None:
             failures += 1
     if failures:
         print(f"run.failures,0,{failures}")
-    sys.exit(0)
+    sys.exit(1 if failures else 0)
 
 
 if __name__ == "__main__":

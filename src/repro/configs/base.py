@@ -62,6 +62,14 @@ class ModelConfig:
     compute_dtype: str = "bfloat16"
     # --- attention core dispatch (models.attention.attention_core) ---
     attn_impl: str = "auto"      # auto | kernel | interpret | ref
+    # --- fused-op dispatch for the other Pallas custom_vjp kernels ---
+    # "auto" uses the fused kernel (fwd + fused backward) on TPU and the
+    # inline jnp path elsewhere; "kernel"/"interpret" force the Pallas op;
+    # "ref" forces the jnp path.
+    norm_impl: str = "auto"      # rmsnorm call sites (models.common /
+                                 # mamba2 gated-output norm)
+    ssm_impl: str = "auto"       # SSD chunk scan (models.mamba2)
+    gate_impl: str = "auto"      # MoE softmax router top-k (models.moe)
     # --- serving decode path (serve_lib.BatchServer / repro.serving) ---
     decode_impl: str = "dense"   # dense (lockstep batch decode against a
                                  # contiguous cache) | paged (continuous

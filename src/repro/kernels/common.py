@@ -1,0 +1,11 @@
+"""Shared helpers for the kernel ops wrappers (padding arithmetic)."""
+from __future__ import annotations
+
+# fp32 sublane: row/token padding granularity for the 2D-tiled ops
+# (rmsnorm, topk_gating).  flash_attention pads sequence blocks at 16
+# (bf16-safe tile) — see its own _SUBLANE.
+SUBLANE_F32 = 8
+
+
+def round_up(n: int, m: int) -> int:
+    return (n + m - 1) // m * m

@@ -19,9 +19,9 @@ backward dQ   kernel.flash_attention_     jax autodiff of the ref
 
 ``ops.flash_attention`` wires the kernels through ``jax.custom_vjp`` so
 the op is trainable end-to-end with O(S) memory on both passes, and pads
-non-multiple-of-block sequence lengths.  The other Pallas ops in this
-package's siblings (ssd_scan, topk_gating, rmsnorm) are still
-forward-only and differentiate through their refs — see ROADMAP.md.
+non-multiple-of-block sequence lengths.  The sibling packages (ssd_scan,
+topk_gating, rmsnorm) follow the same layout: fused custom_vjp backward
+kernels on the kernel/interpret paths, jax autodiff of the ref otherwise.
 """
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref, attention_ref_lse

@@ -21,16 +21,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import round_up as _round_up
 from repro.kernels.flash_attention.kernel import (flash_attention_bwd_dkv,
                                                   flash_attention_bwd_dq,
                                                   flash_attention_fwd)
 from repro.kernels.flash_attention.ref import attention_ref
 
 _SUBLANE = 16    # sequence-block padding granularity (bf16-safe tile)
-
-
-def _round_up(n: int, m: int) -> int:
-    return (n + m - 1) // m * m
 
 
 def _pad_axis(x, axis: int, target: int):

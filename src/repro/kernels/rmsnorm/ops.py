@@ -1,21 +1,74 @@
-"""Jitted wrapper for rmsnorm."""
+"""Differentiable jitted wrapper for rmsnorm: fused kernels on TPU,
+oracle elsewhere.
+
+``rmsnorm`` is wired through ``jax.custom_vjp`` (flash_attention layout):
+
+* primal / fwd: the row-tiled Pallas forward; the vjp-fwd variant also
+  saves the per-row inverse RMS (``rstd``), so the backward never redoes
+  the row reduction;
+* bwd: a fused dx kernel plus the two-pass dw reduction
+  (per-row-block partials, then one jnp sum over blocks).
+
+Row counts that are not block multiples are padded here: padded rows are
+zeros, produce garbage outputs that are sliced off, and contribute
+exactly zero to dw because their ``dy`` rows are zero-padded.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+from repro.kernels.common import SUBLANE_F32, round_up
+from repro.kernels.rmsnorm.kernel import (rmsnorm_bwd_dw, rmsnorm_bwd_dx,
+                                          rmsnorm_fwd)
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 
+BLOCK_ROWS = 256   # row-tile height (also the dw-partial count divisor)
 
-@functools.partial(jax.jit, static_argnames=("impl", "eps"))
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _rmsnorm(x, w, eps, interpret, bn):
+    return rmsnorm_fwd(x, w, eps=eps, block_rows=bn, interpret=interpret)
+
+
+def _rmsnorm_fwd_rule(x, w, eps, interpret, bn):
+    out, rstd = rmsnorm_fwd(x, w, eps=eps, block_rows=bn,
+                            interpret=interpret, save_residuals=True)
+    return out, (x, w, rstd)
+
+
+def _rmsnorm_bwd_rule(eps, interpret, bn, res, dy):
+    x, w, rstd = res
+    dx = rmsnorm_bwd_dx(x, w, dy, rstd, block_rows=bn, interpret=interpret)
+    dw = rmsnorm_bwd_dw(x, dy, rstd, block_rows=bn, interpret=interpret)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_rmsnorm.defvjp(_rmsnorm_fwd_rule, _rmsnorm_bwd_rule)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "impl"))
 def rmsnorm(x, w, *, eps=1e-6, impl="auto"):
+    """impl: 'auto' (kernel on TPU, ref otherwise) | 'kernel' | 'interpret'
+    | 'ref'.  Differentiable on every path: kernel/interpret use the fused
+    Pallas custom_vjp, ref uses jax autodiff of the jnp oracle."""
     if impl == "auto":
         impl = "kernel" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
         return rmsnorm_ref(x, w, eps)
+    if impl == "kernel" and jax.default_backend() != "tpu":
+        raise RuntimeError(
+            "rmsnorm(impl='kernel') requires a TPU backend "
+            f"(got {jax.default_backend()!r}); use impl='interpret' to run "
+            "the Pallas interpreter or impl='ref' for the jnp oracle")
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
-    out = rmsnorm_fwd(x2, w, eps=eps, interpret=(impl == "interpret"))
-    return out.reshape(shape)
+    n = x2.shape[0]
+    bn = min(BLOCK_ROWS, round_up(n, SUBLANE_F32))
+    n_p = round_up(n, bn)
+    if n_p != n:
+        x2 = jnp.pad(x2, ((0, n_p - n), (0, 0)))
+    out = _rmsnorm(x2, w, eps, impl == "interpret", bn)
+    return out[:n].reshape(shape)

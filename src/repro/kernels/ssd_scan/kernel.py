@@ -1,13 +1,22 @@
-"""Mamba-2 SSD chunk-scan kernel (Pallas TPU).
+"""Mamba-2 SSD chunk-scan kernels (Pallas TPU).
 
 The hardware-adaptation showcase (DESIGN.md §6): the selective-state
 recurrence is reformulated as chunked matmuls (MXU work) with the carried
 state held in VMEM scratch across the sequential chunk axis of the grid —
 HBM sees each chunk exactly once.
 
-Grid: (batch, n_chunks) with chunks innermost (sequential on TPU).
+Forward grid: (batch, n_chunks) with chunks innermost (sequential on TPU).
 Per-chunk working set at (c=256, h<=64, p=64, n<=128):
   x (c,h,p) + decay L (h,c,c) fp32 ~ 16-20 MB — fits v5e VMEM.
+
+The vjp-fwd variant additionally saves each chunk's *incoming* carried
+state (b, nc, h, p, n) — O(l/chunk) memory instead of the O(l*chunk)
+decay matrices jnp autodiff of the chunked ref would stash.  The backward
+(``ssd_scan_bwd``) walks the chunk axis in reverse (index maps flip the
+grid), carries dh_state in VMEM, and rebuilds each chunk's decay matrix
+on-chip, so dx/da/dB/dC cost one more pass over the same HBM traffic as
+the forward.  The backward materializes ~3 (c, c, h) intermediates in
+VMEM; prefer chunk<=128 at large h on real hardware.
 """
 from __future__ import annotations
 
@@ -56,34 +65,175 @@ def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, h_sc, *,
         hfin_ref[0] = h_sc[...]
 
 
-def ssd_scan_fwd(x, a, B, C, *, chunk=256, interpret=False):
+def _ssd_res_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, hprev_ref,
+                    h_sc, *, nc: int):
+    """Forward + save the chunk's incoming carried state (vjp residual)."""
+    hprev_ref[0, 0] = jnp.where(pl.program_id(1) == 0,
+                                jnp.zeros_like(h_sc), h_sc[...])
+    _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, h_sc, nc=nc)
+
+
+def ssd_scan_fwd(x, a, B, C, *, chunk=256, interpret=False,
+                 save_residuals=False):
     """x (b,l,h,p); a (b,l,h) log-decay; B/C (b,l,n).
 
-    Returns (y (b,l,h,p), h_final (b,h,p,n))."""
+    Returns (y (b,l,h,p), h_final (b,h,p,n))
+    [, h_prev (b,nc,h,p,n) fp32 incoming state per chunk]."""
     b, l, h, p = x.shape
     n = B.shape[-1]
     c = min(chunk, l)
     assert l % c == 0
     nc = l // c
-    kernel = functools.partial(_ssd_kernel, nc=nc)
-    y, hfin = pl.pallas_call(
+    in_specs = [
+        pl.BlockSpec((1, c, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+        pl.BlockSpec((1, c, h), lambda bi, ci: (bi, ci, 0)),
+        pl.BlockSpec((1, c, n), lambda bi, ci: (bi, ci, 0)),
+        pl.BlockSpec((1, c, n), lambda bi, ci: (bi, ci, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, c, h, p), lambda bi, ci: (bi, ci, 0, 0)),
+        pl.BlockSpec((1, h, p, n), lambda bi, ci: (bi, 0, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+        jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+    ]
+    if save_residuals:
+        out_specs.append(
+            pl.BlockSpec((1, 1, h, p, n), lambda bi, ci: (bi, ci, 0, 0, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32))
+        kernel = functools.partial(_ssd_res_kernel, nc=nc)
+    else:
+        kernel = functools.partial(_ssd_kernel, nc=nc)
+    return pl.pallas_call(
         kernel,
         grid=(b, nc),
-        in_specs=[
-            pl.BlockSpec((1, c, h, p), lambda bi, ci: (bi, ci, 0, 0)),
-            pl.BlockSpec((1, c, h), lambda bi, ci: (bi, ci, 0)),
-            pl.BlockSpec((1, c, n), lambda bi, ci: (bi, ci, 0)),
-            pl.BlockSpec((1, c, n), lambda bi, ci: (bi, ci, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, c, h, p), lambda bi, ci: (bi, ci, 0, 0)),
-            pl.BlockSpec((1, h, p, n), lambda bi, ci: (bi, 0, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
-            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
         interpret=interpret,
     )(x, a, B, C)
-    return y, hfin
+
+
+def _ssd_bwd_kernel(x_ref, a_ref, b_ref, c_ref, hprev_ref, dy_ref, dhfin_ref,
+                    dx_ref, da_ref, db_ref, dc_ref, dh_sc):
+    """One reverse-recurrence step: grads for chunk ``nc - 1 - ci``.
+
+    ``dh_sc`` carries dL/d(state entering the *next* chunk); at ci == 0
+    (the last chunk) that is the caller's dL/d(h_final) cotangent.
+    """
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        dh_sc[...] = dhfin_ref[0]
+
+    x = x_ref[0].astype(jnp.float32)                # (c, h, p)
+    a = a_ref[0].astype(jnp.float32)                # (c, h)
+    B = b_ref[0].astype(jnp.float32)                # (c, n)
+    C = c_ref[0].astype(jnp.float32)                # (c, n)
+    hin = hprev_ref[0, 0]                           # (h, p, n) fp32
+    dy = dy_ref[0].astype(jnp.float32)              # (c, h, p)
+    dhout = dh_sc[...]                              # (h, p, n)
+    c_len = x.shape[0]
+
+    cum = jnp.cumsum(a, axis=0)                     # (c, h)
+    ecum = jnp.exp(cum)
+    ecum_last = jnp.exp(cum[-1, :])                 # (h,)
+    seg = cum[:, None, :] - cum[None, :, :]         # (l, s, h)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (c_len, c_len), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (c_len, c_len), 1)
+    tril = (ii >= jj)[:, :, None]
+    L = jnp.where(tril, jnp.exp(seg), 0.0)          # (l, s, h)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # ---- intra-chunk (diag) term:  y_diag = einsum(scores, L, x) ----
+    G = jnp.einsum("shp,lhp->lsh", x, dy)           # sum_p x[s] dy[l]
+    LG = L * G
+    dscores = jnp.sum(LG, axis=-1)                  # (l, s)
+    dx = jnp.einsum("lsh,lhp->shp", scores[:, :, None] * L, dy)
+    dC = jax.lax.dot_general(dscores, B, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dB = jax.lax.dot_general(dscores, C, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dseg_sum_s = jnp.sum(scores[:, :, None] * LG, axis=1)   # (l, h)
+    dseg_sum_l = jnp.sum(scores[:, :, None] * LG, axis=0)   # (s, h)
+
+    # ---- inter-chunk term:  y_off = einsum(C, h_in, exp(cum)) ----
+    hC = jnp.einsum("lhp,hpn->lhn", dy, hin)
+    dC = dC + jnp.einsum("lhn,lh->ln", hC, ecum)
+    dhin = jnp.einsum("lh,lhp,ln->hpn", ecum, dy, C)
+    dcum = dseg_sum_s - dseg_sum_l + ecum * jnp.einsum("lhn,ln->lh", hC, C)
+
+    # ---- state carry:  h_out = einsum(decay_end, x, B) + h_in*exp(cum_c) ----
+    de = jnp.exp(cum[-1, :][None, :] - cum)         # (s, h)
+    Bdh = jnp.einsum("sn,hpn->shp", B, dhout)
+    dx = dx + de[:, :, None] * Bdh
+    dB = dB + jnp.einsum("sh,shp,hpn->sn", de, x, dhout)
+    dde = jnp.sum(x * Bdh, axis=-1)                 # (s, h)
+    dhin = dhin + dhout * ecum_last[:, None, None]
+    dcum = dcum - de * dde
+    dcum_last = (jnp.sum(de * dde, axis=0) +
+                 ecum_last * jnp.einsum("hpn,hpn->h", hin, dhout))   # (h,)
+    row = jax.lax.broadcasted_iota(jnp.int32, (c_len, a.shape[-1]), 0)
+    dcum = dcum + jnp.where(row == c_len - 1, dcum_last[None, :], 0.0)
+
+    # da[t] = sum_{u>=t} dcum[u]  (reverse cumsum, flip-free)
+    s_ = jnp.cumsum(dcum, axis=0)
+    da = s_[-1:, :] - s_ + dcum
+
+    dx_ref[0] = dx.astype(dx_ref.dtype)
+    da_ref[0] = da.astype(da_ref.dtype)
+    db_ref[0] = dB.astype(db_ref.dtype)
+    dc_ref[0] = dC.astype(dc_ref.dtype)
+    dh_sc[...] = dhin
+
+
+def ssd_scan_bwd(x, a, B, C, hprev, dy, dhfin, *, chunk=256,
+                 interpret=False):
+    """Fused backward: reverse chunked recurrence.
+
+    hprev (b,nc,h,p,n): per-chunk incoming states saved by the forward.
+    dy (b,l,h,p); dhfin (b,h,p,n) cotangent of h_final.
+    Returns (dx, da, dB, dC) matching the primal dtypes."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    c = min(chunk, l)
+    assert l % c == 0
+    nc = l // c
+    assert hprev.shape == (b, nc, h, p, n), (hprev.shape, (b, nc, h, p, n))
+
+    def rev(ci):
+        return nc - 1 - ci
+
+    return pl.pallas_call(
+        _ssd_bwd_kernel,
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((1, c, h, p), lambda bi, ci: (bi, rev(ci), 0, 0)),
+            pl.BlockSpec((1, c, h), lambda bi, ci: (bi, rev(ci), 0)),
+            pl.BlockSpec((1, c, n), lambda bi, ci: (bi, rev(ci), 0)),
+            pl.BlockSpec((1, c, n), lambda bi, ci: (bi, rev(ci), 0)),
+            pl.BlockSpec((1, 1, h, p, n),
+                         lambda bi, ci: (bi, rev(ci), 0, 0, 0)),
+            pl.BlockSpec((1, c, h, p), lambda bi, ci: (bi, rev(ci), 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda bi, ci: (bi, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, h, p), lambda bi, ci: (bi, rev(ci), 0, 0)),
+            pl.BlockSpec((1, c, h), lambda bi, ci: (bi, rev(ci), 0)),
+            pl.BlockSpec((1, c, n), lambda bi, ci: (bi, rev(ci), 0)),
+            pl.BlockSpec((1, c, n), lambda bi, ci: (bi, rev(ci), 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, l, h), a.dtype),
+            jax.ShapeDtypeStruct((b, l, n), B.dtype),
+            jax.ShapeDtypeStruct((b, l, n), C.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, a, B, C, hprev, dy, dhfin)

@@ -1,19 +1,79 @@
-"""Jitted wrapper for ssd_scan."""
+"""Differentiable jitted wrapper for ssd_scan: fused kernels on TPU,
+oracle elsewhere.
+
+``ssd_scan`` is wired through ``jax.custom_vjp`` (flash_attention layout):
+the vjp-fwd saves each chunk's incoming carried state (O(l/chunk) memory),
+and the backward runs the reverse chunked recurrence as one Pallas kernel
+(``ssd_scan_bwd``) instead of differentiating the O(chunk^2) decay
+matrices of the jnp ref.
+
+Sequence lengths that are not chunk multiples are padded here with zero
+inputs: zero x/B leave the carried state (and therefore h_final) exact,
+padded y rows are sliced off, and padded rows receive zero cotangents so
+dx/da/dB/dC for real steps are unaffected.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
+from repro.kernels.common import round_up
+from repro.kernels.ssd_scan.kernel import ssd_scan_bwd, ssd_scan_fwd
 from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def _pad_steps(x, target: int):
+    if x.shape[1] == target:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, target - x.shape[1])
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _ssd_scan(x, a, B, C, chunk, interpret):
+    return ssd_scan_fwd(x, a, B, C, chunk=chunk, interpret=interpret)
+
+
+def _ssd_scan_fwd_rule(x, a, B, C, chunk, interpret):
+    y, hfin, hprev = ssd_scan_fwd(x, a, B, C, chunk=chunk,
+                                  interpret=interpret, save_residuals=True)
+    return (y, hfin), (x, a, B, C, hprev)
+
+
+def _ssd_scan_bwd_rule(chunk, interpret, res, ct):
+    x, a, B, C, hprev = res
+    dy, dhfin = ct
+    dx, da, dB, dC = ssd_scan_bwd(x, a, B, C, hprev,
+                                  dy.astype(jnp.float32),
+                                  dhfin.astype(jnp.float32),
+                                  chunk=chunk, interpret=interpret)
+    return dx, da, dB, dC
+
+
+_ssd_scan.defvjp(_ssd_scan_fwd_rule, _ssd_scan_bwd_rule)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "impl"))
 def ssd_scan(x, a, B, C, *, chunk=256, impl="auto"):
+    """impl: 'auto' (kernel on TPU, ref otherwise) | 'kernel' | 'interpret'
+    | 'ref'.  Differentiable on every path: kernel/interpret use the fused
+    Pallas custom_vjp, ref uses jax autodiff of the chunked jnp scan."""
     if impl == "auto":
         impl = "kernel" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
         return ssd_ref(x, a, B, C, chunk)
-    return ssd_scan_fwd(x, a, B, C, chunk=chunk,
-                        interpret=(impl == "interpret"))
+    if impl == "kernel" and jax.default_backend() != "tpu":
+        raise RuntimeError(
+            "ssd_scan(impl='kernel') requires a TPU backend "
+            f"(got {jax.default_backend()!r}); use impl='interpret' to run "
+            "the Pallas interpreter or impl='ref' for the jnp oracle")
+    l = x.shape[1]
+    c = min(chunk, l)
+    l_p = round_up(l, c)
+    if l_p != l:
+        x, a, B, C = (_pad_steps(t, l_p) for t in (x, a, B, C))
+    y, hfin = _ssd_scan(x, a, B, C, c, impl == "interpret")
+    return y[:, :l], hfin

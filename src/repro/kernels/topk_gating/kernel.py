@@ -1,8 +1,14 @@
-"""MoE router top-k gating kernel (Pallas TPU).
+"""MoE router top-k gating kernels (Pallas TPU).
 
-Fuses softmax + iterative top-k (k unrolled max/mask rounds in VREGs) +
-renormalization over a (token_block, n_experts) tile — the EP dispatch
-front-end (HaiScale EP, paper §V-B).
+Forward fuses softmax + iterative top-k (k unrolled max/mask rounds in
+VREGs) + renormalization over a (token_block, n_experts) tile — the EP
+dispatch front-end (HaiScale EP, paper §V-B).
+
+The backward (``topk_gating_bwd``) recomputes the tile's softmax from the
+saved logits, gathers/scatters through the saved top-k indices with an
+on-chip one-hot, and emits dlogits in one fused pass — never
+materializing the dense (T, E) x (T, k) jacobian jnp autodiff of
+``top_k`` + renorm would route through.
 """
 from __future__ import annotations
 
@@ -58,3 +64,47 @@ def topk_gating_fwd(logits, k: int, *, renorm=True, block_tokens=512,
                    jax.ShapeDtypeStruct((T, k), jnp.int32)],
         interpret=interpret,
     )(logits)
+
+
+def _gating_bwd_kernel(logits_ref, i_ref, dw_ref, dl_ref, *, k: int,
+                       renorm: bool):
+    x = logits_ref[...].astype(jnp.float32)         # (bt, E)
+    idx = i_ref[...]                                # (bt, k) i32
+    dw = dw_ref[...].astype(jnp.float32)            # (bt, k)
+    bt, E = x.shape
+    # recompute the tile's softmax (cheaper than an HBM residual round-trip)
+    m = jnp.max(x, axis=1, keepdims=True)
+    p = jnp.exp(x - m)
+    p = p / jnp.sum(p, axis=1, keepdims=True)
+    # gather raw top-k probs / scatter dwr through one on-chip one-hot
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bt, k, E), 2)
+    onehot = (iota == idx[:, :, None]).astype(jnp.float32)   # (bt, k, E)
+    wr = jnp.sum(p[:, None, :] * onehot, axis=-1)            # (bt, k)
+    if renorm:
+        S = jnp.maximum(jnp.sum(wr, axis=1, keepdims=True), 1e-9)
+        wn = wr / S
+        dwr = (dw - jnp.sum(dw * wn, axis=1, keepdims=True)) / S
+    else:
+        dwr = dw
+    dp = jnp.sum(dwr[:, :, None] * onehot, axis=1)           # (bt, E) sparse
+    c = jnp.sum(dwr * wr, axis=1, keepdims=True)             # = sum_e dp*p
+    dl_ref[...] = (p * (dp - c)).astype(dl_ref.dtype)
+
+
+def topk_gating_bwd(logits, experts, dw, *, k: int, renorm=True,
+                    block_tokens=512, interpret=False):
+    """dL/dlogits for (weights, _) = topk_gating(logits)."""
+    T, E = logits.shape
+    bt = min(block_tokens, T)
+    assert T % bt == 0
+    kernel = functools.partial(_gating_bwd_kernel, k=k, renorm=renorm)
+    return pl.pallas_call(
+        kernel,
+        grid=(T // bt,),
+        in_specs=[pl.BlockSpec((bt, E), lambda i: (i, 0)),
+                  pl.BlockSpec((bt, k), lambda i: (i, 0)),
+                  pl.BlockSpec((bt, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, E), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, E), logits.dtype),
+        interpret=interpret,
+    )(logits, experts, dw)

@@ -1,19 +1,72 @@
-"""Jitted wrapper for topk_gating."""
+"""Differentiable jitted wrapper for topk_gating: fused kernels on TPU,
+oracle elsewhere.
+
+``topk_gating`` is wired through ``jax.custom_vjp`` (flash_attention
+layout): the vjp-fwd saves only the logits and the winning expert indices
+(the weights are recomputed on-chip), and the backward scatters dlogits
+for the renormalized-softmax branch in one fused pass instead of
+materializing the dense (T, E) top-k jacobian.  The integer ``experts``
+output is non-differentiable; its cotangent is ignored.
+
+Token counts that are not block multiples are padded here: padded rows
+are zero logits whose outputs are sliced off and whose cotangents are
+zero, so real rows' dlogits are unaffected.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.topk_gating.kernel import topk_gating_fwd
+from repro.kernels.common import SUBLANE_F32, round_up
+from repro.kernels.topk_gating.kernel import topk_gating_bwd, topk_gating_fwd
 from repro.kernels.topk_gating.ref import topk_gating_ref
+
+_BLOCK_TOKENS = 512
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _topk_gating(logits, k, renorm, interpret, bt):
+    return topk_gating_fwd(logits, k, renorm=renorm, block_tokens=bt,
+                           interpret=interpret)
+
+
+def _topk_gating_fwd_rule(logits, k, renorm, interpret, bt):
+    w, i = topk_gating_fwd(logits, k, renorm=renorm, block_tokens=bt,
+                           interpret=interpret)
+    return (w, i), (logits, i)
+
+
+def _topk_gating_bwd_rule(k, renorm, interpret, bt, res, ct):
+    logits, experts = res
+    dw, _ = ct     # experts is int32: its cotangent carries no information
+    dlogits = topk_gating_bwd(logits, experts, dw, k=k, renorm=renorm,
+                              block_tokens=bt, interpret=interpret)
+    return (dlogits,)
+
+
+_topk_gating.defvjp(_topk_gating_fwd_rule, _topk_gating_bwd_rule)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "renorm", "impl"))
-def topk_gating(logits, k: int, *, renorm=True, impl="auto"):
+def topk_gating(logits, *, k: int, renorm=True, impl="auto"):
+    """impl: 'auto' (kernel on TPU, ref otherwise) | 'kernel' | 'interpret'
+    | 'ref'.  Differentiable on every path: kernel/interpret use the fused
+    Pallas custom_vjp, ref uses jax autodiff of the jnp oracle."""
     if impl == "auto":
         impl = "kernel" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
         return topk_gating_ref(logits, k, renorm)
-    return topk_gating_fwd(logits, k, renorm=renorm,
-                           interpret=(impl == "interpret"))
+    if impl == "kernel" and jax.default_backend() != "tpu":
+        raise RuntimeError(
+            "topk_gating(impl='kernel') requires a TPU backend "
+            f"(got {jax.default_backend()!r}); use impl='interpret' to run "
+            "the Pallas interpreter or impl='ref' for the jnp oracle")
+    T = logits.shape[0]
+    bt = min(_BLOCK_TOKENS, round_up(T, SUBLANE_F32))
+    T_p = round_up(T, bt)
+    if T_p != T:
+        logits = jnp.pad(logits, ((0, T_p - T), (0, 0)))
+    w, i = _topk_gating(logits, k, renorm, impl == "interpret", bt)
+    return w[:T], i[:T]

@@ -17,14 +17,39 @@ def norm_defs(cfg, name="norm"):
     return d
 
 
+def norm_kernel_impl(cfg, x):
+    """Resolve ``cfg.norm_impl`` for an rmsnorm call site.
+
+    Returns "kernel"/"interpret" to route through the fused Pallas
+    custom_vjp op (``kernels.rmsnorm``), or None for the inline jnp path.
+    "auto" only picks the kernel for multi-token streams: one-token decode
+    would pay a pallas_call per layer per token for a trivial reduction.
+    """
+    impl = getattr(cfg, "norm_impl", "auto")
+    if impl in ("kernel", "interpret"):
+        return impl
+    if impl == "auto" and jax.default_backend() == "tpu" \
+            and x.ndim >= 2 and x.shape[-2] > 1:
+        return "kernel"
+    return None
+
+
 def apply_norm(cfg, params, x, name="norm"):
     """Stats in fp32, scaling applied in the stream dtype.
 
     Upcasting the whole stream (x.astype(f32) ... .astype(bf16)) makes AD
     carry the residual GRADIENT in fp32 through every layer: 2x bytes on
     every boundary psum and on the scan's stacked backward saves (measured
-    on llama3-405b — EXPERIMENTS.md §Perf iteration L1)."""
+    on llama3-405b — EXPERIMENTS.md §Perf iteration L1).  The fused
+    rmsnorm path keeps the same property: its custom_vjp backward emits dx
+    in the stream dtype from the saved inverse-RMS residual instead of
+    letting AD differentiate the row reduction."""
     dtype = x.dtype
+    if cfg.norm == "rmsnorm":
+        impl = norm_kernel_impl(cfg, x)
+        if impl is not None:
+            from repro.kernels.rmsnorm import rmsnorm
+            return rmsnorm(x, params[f"{name}_scale"], impl=impl)
     xf = x.astype(jnp.float32)
     if cfg.norm == "layernorm":
         mean = jnp.mean(xf, axis=-1, keepdims=True)

@@ -4,11 +4,27 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import apply_norm
+from repro.models.common import apply_norm, norm_kernel_impl
 from repro.models.params import p
 from repro.models.ssm_common import (causal_conv1d, conv_state_update,
                                      ssd_chunked, ssd_recurrent_step)
 from repro.parallel.axes import shard_act
+
+
+def _ssd(cfg, x, a, B, C, chunk):
+    """Dispatch the chunked SSD scan on ``cfg.ssm_impl``: the fused Pallas
+    custom_vjp op (forward + reverse-recurrence backward kernels) on the
+    kernel/interpret paths, the jnp ``lax.scan`` ref otherwise.  Like the
+    norm/gating resolvers, "auto" skips the kernel for one-token streams
+    (a pallas_call per layer for a single recurrence step)."""
+    impl = getattr(cfg, "ssm_impl", "auto")
+    if impl in ("kernel", "interpret") or (
+            impl == "auto" and x.shape[1] > 1 and
+            jax.default_backend() == "tpu"):
+        from repro.kernels.ssd_scan import ssd_scan
+        return ssd_scan(x, a, B, C, chunk=chunk,
+                        impl="kernel" if impl == "auto" else impl)
+    return ssd_chunked(x, a, B, C, chunk)
 
 
 def _dims(cfg):
@@ -53,10 +69,15 @@ def _gated_out(cfg, params, y, z):
     """y, z (b, l, d_in) -> out (b, l, d)."""
     cd = z.dtype
     g = y * jax.nn.silu(z)
-    gf = g.astype(jnp.float32)
-    ms = jnp.mean(jnp.square(gf), axis=-1, keepdims=True)
-    g = (gf * jax.lax.rsqrt(ms + 1e-6) *
-         params["norm_scale"].astype(jnp.float32)).astype(cd)
+    impl = norm_kernel_impl(cfg, g)
+    if impl is not None:
+        from repro.kernels.rmsnorm import rmsnorm
+        g = rmsnorm(g, params["norm_scale"], impl=impl)
+    else:
+        gf = g.astype(jnp.float32)
+        ms = jnp.mean(jnp.square(gf), axis=-1, keepdims=True)
+        g = (gf * jax.lax.rsqrt(ms + 1e-6) *
+             params["norm_scale"].astype(jnp.float32)).astype(cd)
     return g @ params["out_proj"].astype(cd)
 
 
@@ -73,7 +94,7 @@ def apply_mamba2(cfg, params, u):
     xh = shard_act(xh, "batch", "seq", "heads", "head_dim")
     a = dt * A                                                # (b,l,h) log-decay
     chunk = min(s.chunk_size, l)
-    y, _ = ssd_chunked((xh * dt[..., None].astype(xh.dtype)), a, B, C, chunk)
+    y, _ = _ssd(cfg, (xh * dt[..., None].astype(xh.dtype)), a, B, C, chunk)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(b, l, d_in)
     return _gated_out(cfg, params, y, z)
@@ -92,8 +113,8 @@ def mamba2_prefill(cfg, params, u):
     xh = x.reshape(b, l, nheads, s.head_dim)
     a = dt * A
     chunk = min(s.chunk_size, l)
-    y, hfin = ssd_chunked((xh * dt[..., None].astype(xh.dtype)), a, B, C,
-                          chunk)
+    y, hfin = _ssd(cfg, (xh * dt[..., None].astype(xh.dtype)), a, B, C,
+                   chunk)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(b, l, d_in)
     out = _gated_out(cfg, params, y, z)

@@ -85,13 +85,32 @@ def apply_moe(cfg, params, x, *, group_size=DEFAULT_GROUP):
     # ---- router (fp32) ----
     logits = jnp.einsum("gsd,de->gse", xf.astype(jnp.float32),
                         params["router"].astype(jnp.float32))
+    def _topk_renorm(scores):
+        w, e = jax.lax.top_k(scores, m.top_k)                # (G,S,k)
+        return w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9), e
+
     if m.router == "sigmoid":
         scores = jax.nn.sigmoid(logits)
+        weights, experts = _topk_renorm(scores)
     else:
+        # scores stay dense for the aux loss; the top-k selection +
+        # renormalization go through the fused topk_gating custom_vjp op
+        # (one softmax+argmax pass forward, scattered dlogits backward)
+        # on the kernel/interpret paths.  "auto" skips the kernel for
+        # one-token decode (pallas_call per token for a tiny tile).
         scores = jax.nn.softmax(logits, axis=-1)
-    weights, experts = jax.lax.top_k(scores, m.top_k)        # (G,S,k)
-    weights = weights / jnp.maximum(
-        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+        impl = getattr(cfg, "gate_impl", "auto")
+        if impl in ("kernel", "interpret") or (
+                impl == "auto" and s > 1 and
+                jax.default_backend() == "tpu"):
+            from repro.kernels.topk_gating import topk_gating
+            w2, i2 = topk_gating(logits.reshape(G * g, m.n_experts),
+                                 k=m.top_k, renorm=True,
+                                 impl="kernel" if impl == "auto" else impl)
+            weights = w2.reshape(G, g, m.top_k)
+            experts = i2.reshape(G, g, m.top_k)
+        else:
+            weights, experts = _topk_renorm(scores)
 
     # GShard load-balance aux loss
     onehot = jax.nn.one_hot(experts, m.n_experts, dtype=jnp.float32)  # (G,S,k,E)

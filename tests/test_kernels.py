@@ -130,7 +130,7 @@ def test_quant_roundtrip(n):
 def test_topk_gating(T, E, k):
     from repro.kernels.topk_gating import topk_gating, topk_gating_ref
     logits = _rand((T, E), "float32")
-    w, i = topk_gating(logits, k, impl="interpret")
+    w, i = topk_gating(logits, k=k, impl="interpret")
     wr, ir = topk_gating_ref(logits, k)
     assert bool(jnp.all(i == ir))
     np.testing.assert_allclose(np.asarray(w), np.asarray(wr), atol=1e-6)
