@@ -12,12 +12,18 @@ the 320-GPU DeepSeekMoE point (paper: 10.71 s) is the held-out test.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from benchmarks.common import emit
 from benchmarks.netmodel import hfreduce_bw
 
 A100_FP16_MEASURED_TF = 220e12   # paper Table II (measured GEMM)
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE") == "1"
 
 
 def _model(n, C, overlap, flops_total, pp, gb, grad_gb):
@@ -30,10 +36,16 @@ def _model(n, C, overlap, flops_total, pp, gb, grad_gb):
 
 
 def _calibrate(n_lo, t_lo, n_hi, t_hi, flops_total, pp, gb, grad_gb):
-    """Fit (C, overlap) to the curve's end points."""
+    """Fit (C, overlap) to the curve's end points.
+
+    The smoke lane coarsens the grid ~20x — the fit gets sloppier but the
+    <10 % end-point tolerance below still holds, so the paper check stays
+    meaningful as an import/API drift test.
+    """
+    n_c, n_ov = (100, 21) if _smoke() else (400, 101)
     best = None
-    for C in np.linspace(flops_total / 300e12, flops_total / 30e12, 400):
-        for ov in np.linspace(0.0, 1.0, 101):
+    for C in np.linspace(flops_total / 300e12, flops_total / 30e12, n_c):
+        for ov in np.linspace(0.0, 1.0, n_ov):
             e = (abs(_model(n_lo, C, ov, flops_total, pp, gb, grad_gb) - t_lo)
                  / t_lo +
                  abs(_model(n_hi, C, ov, flops_total, pp, gb, grad_gb) - t_hi)
@@ -56,7 +68,7 @@ def run():
     mfu = flops / (C * A100_FP16_MEASURED_TF)
     emit("fig9a.calibration", 0,
          f"MFU={mfu:.2f}(of measured 220TF) overlap={ov:.2f}")
-    for n in (64, 128, 256, 512):
+    for n in ((64, 512) if _smoke() else (64, 128, 256, 512)):
         t = _model(n, C, ov, flops, pp, gb, grad_gb)
         ref = paper_a.get(n)
         emit(f"fig9a.llama13b.n{n}", 0,
@@ -76,7 +88,7 @@ def run():
                          gb_b, grad_gb_b)
     mfu_b = flops_b / (Cb * A100_FP16_MEASURED_TF)
     emit("fig9b.calibration", 0, f"MFU={mfu_b:.2f} overlap={ovb:.2f}")
-    for n in (40, 80, 160, 320, 640):
+    for n in ((40, 320, 640) if _smoke() else (40, 80, 160, 320, 640)):
         t = _model(n, Cb, ovb, flops_b, pp_b, gb_b, grad_gb_b)
         ref = paper_b.get(n)
         emit(f"fig9b.dsmoe16b.n{n}", 0,

@@ -3,14 +3,17 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig7 fig9  # subset
-  PYTHONPATH=src python -m benchmarks.run attn decode grad --smoke
-                                                     # CI drift check
+  PYTHONPATH=src python -m benchmarks.run attn decode grad roofline \
+      fig7 fig8 fig9 ddp --smoke                     # CI drift check
 
 ``--smoke`` sets REPRO_BENCH_SMOKE=1 before any suite runs: the kernel
-suites (attn / decode / grad) drop to their reduced off-TPU shapes with
-repeat=1 regardless of backend.  The smoke lane exists to catch
-import/API drift, not to assert perf numbers — but a suite raising still
-fails the run (nonzero exit), which is what CI keys off.
+suites (attn / decode / grad / ddp) drop to their reduced off-TPU shapes
+with repeat=1 regardless of backend, and the analytic figure suites
+(fig7 / fig8 / fig9) keep only their curve end points + a coarse
+calibration grid, so their paper-range checks still run.  The smoke lane
+exists to catch import/API drift, not to assert perf numbers — but a
+suite raising still fails the run (nonzero exit), which is what CI keys
+off.
 """
 from __future__ import annotations
 
@@ -24,10 +27,11 @@ def main() -> None:
         args = [a for a in args if a != "--smoke"]
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
-    from benchmarks import (attn_bench, decode_bench, fig7_allreduce,
-                            fig8_weakscaling, fig9_strongscaling,
-                            grad_bench, roofline, table2_costperf,
-                            table3_network, table6_failures)
+    from benchmarks import (attn_bench, ddp_bench, decode_bench,
+                            fig7_allreduce, fig8_weakscaling,
+                            fig9_strongscaling, grad_bench, roofline,
+                            table2_costperf, table3_network,
+                            table6_failures)
 
     suites = {
         "table2": table2_costperf.run,
@@ -40,6 +44,7 @@ def main() -> None:
         "attn": attn_bench.run,
         "decode": decode_bench.run,
         "grad": grad_bench.run,
+        "ddp": ddp_bench.run,
     }
 
     names = args or list(suites)

@@ -7,12 +7,11 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ParallelConfig
 from repro.configs.registry import smoke_config
 from repro.data.synthetic import batch_for_model
 from repro.models import build_model
 from repro.optim import AdamW, warmup_cosine
-from repro import train_lib
+from repro.parallel.plan import ParallelPlan, init_state, make_train_step
 
 
 def main():
@@ -22,13 +21,17 @@ def main():
     model = build_model(cfg)
     print(f"model: {cfg.name}  params={cfg.param_count():,}")
 
-    # 2. train a few steps
+    # 2. train a few steps.  The ParallelPlan picks the executor — swap
+    #    mode="ddp" / mode="pp" on a multi-device mesh for the explicit
+    #    HFReduce or pipelined paths (launch/train.py --parallel).
     opt = AdamW(lr=warmup_cosine(3e-3, 2, 20), param_dtype="float32")
-    state = opt.init(model.init(jax.random.PRNGKey(0)))
+    params = model.init(jax.random.PRNGKey(0))
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    pcfg = ParallelConfig(tp=1, fsdp=False, batch_axes=("data",))
-    step = jax.jit(train_lib.make_train_step(model, opt, pcfg, mesh),
-                   donate_argnums=(0,))
+    plan = ParallelPlan(mode="gspmd", tp=1, fsdp=False,
+                        batch_axes=("data",))
+    state = init_state(plan, opt, params, mesh)
+    step = make_train_step(plan, model, opt, mesh,
+                           params_template=params, donate=True)
     for i in range(10):
         batch = {k: jnp.asarray(v) for k, v in
                  batch_for_model(cfg, "train", i, 4, 64).items()}

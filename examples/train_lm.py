@@ -16,13 +16,12 @@ import jax.numpy as jnp
 
 from repro.ckpt import CheckpointManager
 from repro.ckpt.manager import _FS3Backend
-from repro.configs.base import ParallelConfig
 from repro.configs.registry import get_arch
 from repro.data import make_synthetic_loader
 from repro.fs3 import FS3Client, FS3Cluster
 from repro.models import build_model
 from repro.optim import AdamW, warmup_cosine
-from repro import train_lib
+from repro.parallel.plan import ParallelPlan, init_state, make_train_step
 
 
 def main():
@@ -45,11 +44,13 @@ def main():
 
     opt = AdamW(lr=warmup_cosine(3e-4, 20, args.steps),
                 param_dtype="float32")
-    state = opt.init(model.init(jax.random.PRNGKey(0)))
+    params = model.init(jax.random.PRNGKey(0))
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    pcfg = ParallelConfig(tp=1, fsdp=False, batch_axes=("data",))
-    step_fn = jax.jit(train_lib.make_train_step(model, opt, pcfg, mesh),
-                      donate_argnums=(0,))
+    plan = ParallelPlan(mode="gspmd", tp=1, fsdp=False,
+                        batch_axes=("data",))
+    state = init_state(plan, opt, params, mesh)
+    step_fn = make_train_step(plan, model, opt, mesh,
+                              params_template=params, donate=True)
 
     workdir = args.workdir or tempfile.mkdtemp(prefix="train_lm_")
     cluster = FS3Cluster(os.path.join(workdir, "fs3"), n_nodes=2,

@@ -71,6 +71,26 @@ def plan_buckets(tree, bucket_bytes=DEFAULT_BUCKET_BYTES,
                       wire_dtype)
 
 
+def bucket_leaf_ranges(plan: BucketPlan) -> tuple:
+    """Map each bucket's flat slice back to the leaf range it covers.
+
+    Buckets always contain whole leaves, so every ``(start, end)`` in
+    ``plan.bucket_slices`` lands exactly on leaf boundaries; the returned
+    ``(i0, i1)`` pairs (leaf indices, forward flatten order) let a caller
+    sync a bucket without materializing the full flat concat — the overlap
+    hook in ``core/ddp.py`` hangs one custom_vjp per range off these.
+    """
+    offsets = np.cumsum((0,) + plan.sizes)
+    ranges = []
+    for start, end in plan.bucket_slices:
+        i0 = int(np.searchsorted(offsets, start))
+        i1 = int(np.searchsorted(offsets, end))
+        assert offsets[i0] == start and offsets[i1] == end, \
+            (start, end, tuple(offsets))
+        ranges.append((i0, i1))
+    return tuple(ranges)
+
+
 def flatten_tree(tree, wire_dtype=None) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
     if wire_dtype is None:
@@ -79,12 +99,18 @@ def flatten_tree(tree, wire_dtype=None) -> jax.Array:
                             for l in leaves])
 
 
-def unflatten_tree(plan: BucketPlan, flat: jax.Array):
+def unflatten_leaves(flat: jax.Array, shapes, dtypes, sizes) -> list:
+    """Split a flat concat back into leaves (restoring leaf dtypes)."""
     out, off = [], 0
-    for shape, dtype, size in zip(plan.shapes, plan.dtypes, plan.sizes):
+    for shape, dtype, size in zip(shapes, dtypes, sizes):
         out.append(flat[off:off + size].reshape(shape).astype(dtype))
         off += size
-    return jax.tree_util.tree_unflatten(plan.treedef, out)
+    return out
+
+
+def unflatten_tree(plan: BucketPlan, flat: jax.Array):
+    leaves = unflatten_leaves(flat, plan.shapes, plan.dtypes, plan.sizes)
+    return jax.tree_util.tree_unflatten(plan.treedef, leaves)
 
 
 def bucketed_apply(plan: BucketPlan, tree, fn):

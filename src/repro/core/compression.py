@@ -4,6 +4,11 @@ The paper's HFReduce reduces on CPU in FP32/FP16/BF16/FP8 (§IV-D1) — the
 dtype of the wire format is a first-class knob.  Here:
 
   * ``bf16_psum``: cast -> psum -> cast (2x fewer cross-pod bytes vs fp32).
+  * ``fp8_psum``: float8_e4m3 wire format (4x fewer bytes); payloads travel
+    as e4m3 bitcast to uint8, ranks dequantize + sum in fp32 locally, so no
+    collective ever adds in fp8.  e4m3 saturates at +-448 — callers must
+    pre-scale means into the sum (``hfreduce(prescale=...)``) rather than
+    dividing after decompression.
   * ``int8_psum``: blockwise-absmax int8 quantization; the allreduce is a
     quantize -> all_to_all -> local dequant-sum -> quantize -> all_gather
     schedule so payloads stay int8 on the wire (4x fewer bytes).
@@ -45,6 +50,37 @@ def dequantize_blockwise(q, scales, block=BLOCK):
 def bf16_psum(x, axis_name):
     """Cross-pod allreduce with a bf16 wire format."""
     return lax.psum(x.astype(jnp.bfloat16), axis_name).astype(x.dtype)
+
+
+def fp8_psum(x, axis_name):
+    """Cross-pod allreduce with a float8_e4m3 wire format.
+
+    Schedule (P = axis size): split x into P chunks; cast to e4m3;
+    all_to_all the raw bytes (bitcast to uint8 — f8 collectives are not
+    supported on every backend); dequantize + sum in fp32 locally;
+    requantize; all_gather; dequantize.  Wire bytes per rank: 2 * |x| / 4.
+    """
+    P = axis_size(axis_name)
+    if P == 1:
+        return x
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % P
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    n = flat.shape[0]
+    q = lax.bitcast_convert_type(flat.astype(jnp.float8_e4m3fn), jnp.uint8)
+    qc = q.reshape(P, n // P)
+    qr = lax.all_to_all(qc, axis_name, split_axis=0, concat_axis=0,
+                        tiled=False)
+    deq = lax.bitcast_convert_type(qr, jnp.float8_e4m3fn).astype(jnp.float32)
+    red = jnp.sum(deq, axis=0)
+    q2 = lax.bitcast_convert_type(red.astype(jnp.float8_e4m3fn), jnp.uint8)
+    qg = lax.all_gather(q2, axis_name, axis=0, tiled=True)
+    out = lax.bitcast_convert_type(qg, jnp.float8_e4m3fn).astype(jnp.float32)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(shape).astype(dtype)
 
 
 def int8_psum(x, axis_name, block=BLOCK):
@@ -89,6 +125,8 @@ def make_weak_psum(kind: str):
         return None
     if kind == "bf16":
         return bf16_psum
+    if kind == "fp8":
+        return fp8_psum
     if kind == "int8":
         return int8_psum
     raise ValueError(kind)

@@ -40,11 +40,19 @@ def _pad_to(x, mult):
 
 
 def hfreduce(x, *, strong_axis="data", weak_axis="pod",
-             weak_psum=None):
+             weak_psum=None, prescale=None):
     """Hierarchical allreduce of ``x`` (any shape) over strong+weak axes.
 
     ``weak_psum(x, axis_name)``: override for the cross-pod phase (e.g. a
     compressed or tree-scheduled allreduce).  Defaults to ``lax.psum``.
+
+    ``prescale``: optional scalar multiplied into the intra-pod shard
+    *before* the weak-axis phase.  Gradient means (1/n_shards) belong here
+    rather than after decompression: a compressed phase-2 wire format
+    (fp8/int8/bf16) then quantizes mean-magnitude values instead of
+    pod-sum-magnitude ones, which both avoids overflow of narrow formats
+    (fp8 e4m3 saturates at 448) and keeps the quantization step size — and
+    therefore the absolute error — 1/n_shards smaller (DESIGN.md §3).
     """
     weak_psum = weak_psum or (lambda v, ax: lax.psum(v, ax))
     strong = axis_size(strong_axis)
@@ -54,6 +62,8 @@ def hfreduce(x, *, strong_axis="data", weak_axis="pod",
     # phase 1: intra-pod reduce-scatter (strong fabric)
     shard = lax.psum_scatter(flat, strong_axis, scatter_dimension=0,
                              tiled=True)
+    if prescale is not None:
+        shard = shard * jnp.asarray(prescale, shard.dtype)
     # phase 2: cross-pod allreduce on the 1/strong shard (weak link)
     shard = weak_psum(shard, weak_axis)
     # phase 3: intra-pod all-gather

@@ -4,19 +4,81 @@
   PYTHONPATH=src python -m repro.launch.train --arch llama3-405b --smoke \\
       --steps 20 --batch 8 --seq 128
 
-  # production lowering path is exercised by launch/dryrun.py; this driver
-  # runs real steps on whatever devices exist, with checkpointing + the
-  # fault-tolerant platform runner.
+  # explicit HFReduce DDP path (overlapped bucket sync):
+  PYTHONPATH=src python -m repro.launch.train --arch phi4-mini-3.8b \\
+      --smoke --parallel ddp --steps 20 --batch 8 --seq 128
+
+  # pipelined path (1F1B over a "pipe" mesh axis):
+  PYTHONPATH=src python -m repro.launch.train --arch phi4-mini-3.8b \\
+      --smoke --parallel pp --pp-microbatches 4 --steps 20 --batch 8
+
+The executor is selected by ``--parallel {gspmd,ddp,pp}``, which builds a
+``repro.parallel.plan.ParallelPlan`` (DESIGN.md §3) and hands it to the
+single entry point ``plan.make_train_step``.  The production lowering path
+is exercised by launch/dryrun.py; this driver runs real steps on whatever
+devices exist, with checkpointing + the fault-tolerant platform runner.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def build_mesh(parallel: str, pp_stages: int = 1):
+    """Axis layout per executor (all degenerate axes keep size 1)."""
+    n = len(jax.devices())
+    if parallel == "ddp":
+        # weak "pod" axis first: a single host has no pod boundary, so
+        # pods=1 and HFReduce's cross-pod phase is a no-op
+        return jax.make_mesh((1, n), ("pod", "data"))
+    if parallel == "pp":
+        if n % pp_stages:
+            raise SystemExit(f"--pp-stages {pp_stages} does not divide "
+                             f"{n} devices")
+        return jax.make_mesh((pp_stages, 1, n // pp_stages),
+                             ("pipe", "pod", "data"))
+    return jax.make_mesh((1, len(jax.devices())), ("data", "model")) \
+        if n > 1 else jax.make_mesh((1, 1), ("data", "model"))
+
+
+def build_plan(args) -> "object":
+    from repro.parallel.plan import ParallelPlan
+    bucket_bytes = args.bucket_mb * (1 << 20) if args.bucket_mb else None
+    if args.parallel != "ddp":
+        # refuse rather than silently ignore explicit-DDP-only knobs
+        for flag, name in ((args.zero1, "--zero1"),
+                           (args.no_overlap, "--no-overlap")):
+            if flag:
+                raise SystemExit(
+                    f"{name} applies to --parallel ddp only (the gspmd "
+                    "path takes ZeRO-1 from parallel/spec.py profiles; "
+                    "the pp path has no overlap hooks)")
+    if args.parallel == "gspmd":
+        if args.compress or args.bucket_mb:
+            raise SystemExit("--compress/--bucket-mb apply to the "
+                             "explicit paths (--parallel ddp/pp) only")
+        return ParallelPlan(mode="gspmd", tp=1, fsdp=False, zero1=False,
+                            batch_axes=("data",),
+                            microbatch=args.microbatch)
+    if args.parallel == "ddp":
+        return ParallelPlan(
+            mode="ddp", batch_axes=("pod", "data"),
+            compress=args.compress,
+            bucket_bytes=bucket_bytes,
+            overlap=not args.no_overlap and not args.zero1,
+            zero1=args.zero1)
+    return ParallelPlan(
+        mode="pp", batch_axes=("pod", "data"),
+        compress=args.compress,
+        bucket_bytes=bucket_bytes,
+        pp_schedule=args.pp_schedule,
+        pp_microbatches=args.pp_microbatches)
 
 
 def main(argv=None):
@@ -34,17 +96,38 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--parallel", choices=("gspmd", "ddp", "pp"),
+                    default="gspmd",
+                    help="executor: GSPMD sharding rules, explicit "
+                         "HFReduce DDP (shard_map), or the pipelined path")
     ap.add_argument("--ddp", action="store_true",
-                    help="explicit HFReduce DDP path (shard_map) instead of "
-                         "GSPMD; needs a multi-device mesh")
+                    help="deprecated alias for --parallel ddp")
+    # --- ParallelPlan knobs (ddp / pp) ---
+    ap.add_argument("--compress", default="",
+                    choices=("", "bf16", "fp8", "int8"),
+                    help="cross-pod gradient wire format")
+    ap.add_argument("--bucket-mb", type=int, default=0,
+                    help="gradient bucket budget in MiB (0: default)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="post-hoc whole-tree grad sync (parity baseline)")
+    ap.add_argument("--zero1", action="store_true",
+                    help="explicit ZeRO-1: flat-sharded fp32 masters")
+    ap.add_argument("--pp-stages", type=int, default=0,
+                    help="pipeline stages (default: all devices)")
+    ap.add_argument("--pp-schedule", choices=("gpipe", "1f1b"),
+                    default="1f1b")
+    ap.add_argument("--pp-microbatches", type=int, default=4)
     args = ap.parse_args(argv)
+    if args.ddp:
+        warnings.warn("--ddp is deprecated; use --parallel ddp",
+                      DeprecationWarning, stacklevel=2)
+        args.parallel = "ddp"
 
-    from repro.configs.base import ParallelConfig, ShapeConfig
     from repro.configs.registry import get_arch, smoke_config
     from repro.data import make_synthetic_loader
     from repro.models import build_model
     from repro.optim import AdamW, warmup_cosine
-    from repro import train_lib
+    from repro.parallel import plan as plan_lib
 
     cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
     if args.smoke:
@@ -53,18 +136,18 @@ def main(argv=None):
     opt = AdamW(lr=warmup_cosine(args.lr, 5, args.steps),
                 param_dtype=cfg.compute_dtype)
 
-    devices = jax.devices()
-    mesh = jax.make_mesh((1, len(devices)), ("data", "model")) \
-        if len(devices) > 1 else jax.make_mesh((1, 1), ("data", "model"))
-    pcfg = ParallelConfig(tp=1, fsdp=False, zero1_pod=False,
-                          batch_axes=("data",), microbatch=args.microbatch)
+    if args.parallel == "pp" and not args.pp_stages:
+        args.pp_stages = max(d for d in range(1, len(jax.devices()) + 1)
+                             if cfg.n_layers % d == 0
+                             and len(jax.devices()) % d == 0)
+    mesh = build_mesh(args.parallel, args.pp_stages)
+    plan = build_plan(args)
 
     rng = jax.random.PRNGKey(args.seed)
     params = model.init(rng)
-    state = opt.init(params)
-
-    step_fn = jax.jit(train_lib.make_train_step(model, opt, pcfg, mesh),
-                      donate_argnums=(0,))
+    state = plan_lib.init_state(plan, opt, params, mesh)
+    step_fn = plan_lib.make_train_step(
+        plan, model, opt, mesh, params_template=params, donate=True)
 
     manager = None
     start_step = 0

@@ -69,14 +69,14 @@ class AdamW:
                 "m": sds(self.moments_dtype), "v": sds(self.moments_dtype),
                 "step": jax.ShapeDtypeStruct((), "int32")}
 
-    def apply(self, state, grads) -> dict:
-        step = state["step"] + 1
-        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+    def update_fn(self, step):
+        """The per-leaf Adam update at ``step`` (post-clip): shared by
+        ``apply`` and the explicit ZeRO-1 flat-shard step (core/ddp.py),
+        so the two paths cannot drift."""
         lr = self._lr(step)
         b1, b2 = self.b1, self.b2
         bc1 = 1.0 - b1 ** step.astype(jnp.float32)
         bc2 = 1.0 - b2 ** step.astype(jnp.float32)
-
         mdt = self.moments_dtype
 
         def upd(g, m, v, mast):
@@ -86,6 +86,13 @@ class AdamW:
             mast = mast - lr * (m / bc1 / (jnp.sqrt(v / bc2) + self.eps)
                                 + self.weight_decay * mast)
             return m.astype(mdt), v.astype(mdt), mast
+
+        return upd
+
+    def apply(self, state, grads) -> dict:
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        upd = self.update_fn(step)
 
         flat_g, treedef = jax.tree_util.tree_flatten(grads)
         flat_m = treedef.flatten_up_to(state["m"])

@@ -97,26 +97,33 @@ def check_hfreduce_tree_combo():
     return float(jnp.max(jnp.abs(out - ref)))
 
 
-def check_ddp_step():
-    """DDP shard_map step == single-device step on the same global batch."""
+def _small_dense():
     import dataclasses as dc
     from repro.configs.registry import smoke_config
-    from repro.configs.base import ParallelConfig
     from repro.models import build_model
     from repro.optim import AdamW
-    from repro.core.ddp import make_ddp_train_step
-    from repro.data.synthetic import batch_for_model
 
     cfg = dc.replace(smoke_config("phi4-mini-3.8b"), n_layers=2,
                      compute_dtype="float32")
     model = build_model(cfg)
     opt = AdamW(lr=1e-2, param_dtype="float32")
     params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, opt, params
+
+
+def check_ddp_step():
+    """DDP shard_map step (overlapped HFReduce) == single-device step."""
+    from repro.configs.base import ParallelConfig
+    from repro.core.ddp import make_ddp_train_step
+    from repro.parallel.plan import ParallelPlan
+    from repro.data.synthetic import batch_for_model
+
+    cfg, model, opt, params = _small_dense()
     state = opt.init(params)
     mesh = _mesh()
     step, _ = make_ddp_train_step(
         lambda p, b: model.loss(p, b), opt, mesh,
-        batch_axes=("pod", "data"), params_template=params)
+        ParallelPlan(mode="ddp"), params_template=params)
     batch = {k: jnp.asarray(v)
              for k, v in batch_for_model(cfg, "train", 0, 8, 32).items()}
     new_state, metrics = step(state, batch)
@@ -139,6 +146,7 @@ def check_ddp_compressed():
     from repro.models import build_model
     from repro.optim import AdamW
     from repro.core.ddp import make_ddp_train_step
+    from repro.parallel.plan import ParallelPlan
     from repro.data.synthetic import batch_for_model
 
     cfg = dc.replace(smoke_config("xlstm-125m"), block_pattern="ms",
@@ -149,7 +157,7 @@ def check_ddp_compressed():
     mesh = _mesh()
     step, _ = make_ddp_train_step(
         lambda p, b: model.loss(p, b), opt, mesh,
-        batch_axes=("pod", "data"), compress="int8",
+        ParallelPlan(mode="ddp", compress="int8"),
         params_template=state["params"])
     losses = []
     for i in range(3):
@@ -158,6 +166,112 @@ def check_ddp_compressed():
         state, metrics = step(state, batch)
         losses.append(float(metrics["loss"]))
     return losses
+
+
+def check_ddp_overlap():
+    """Overlapped (in-backward custom_vjp hooks) bucket sync == post-hoc
+    whole-tree sync, across bucket budgets and wire compression."""
+    import dataclasses as dc
+    from repro.core.ddp import make_ddp_train_step
+    from repro.parallel.plan import ParallelPlan
+    from repro.data.synthetic import batch_for_model
+
+    cfg, model, opt, params = _small_dense()
+    state = opt.init(params)
+    mesh = _mesh()
+    loss_fn = lambda p, b: model.loss(p, b)
+    batch = {k: jnp.asarray(v)
+             for k, v in batch_for_model(cfg, "train", 0, 8, 32).items()}
+    rows = []
+    for bucket_bytes in (1 << 16, 1 << 22):
+        for compress in ("", "int8"):
+            plan_o = ParallelPlan(mode="ddp", overlap=True,
+                                  compress=compress,
+                                  bucket_bytes=bucket_bytes)
+            step_o, bplan = make_ddp_train_step(
+                loss_fn, opt, mesh, plan_o, params_template=params)
+            step_p, _ = make_ddp_train_step(
+                loss_fn, opt, mesh, dc.replace(plan_o, overlap=False),
+                params_template=params)
+            so, mo = step_o(jax.tree_util.tree_map(jnp.copy, state), batch)
+            sp, mp = step_p(jax.tree_util.tree_map(jnp.copy, state), batch)
+            err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+                jax.tree_util.tree_leaves(so["master"]),
+                jax.tree_util.tree_leaves(sp["master"])))
+            rows.append([bucket_bytes, compress,
+                         len(bplan.bucket_slices), err,
+                         abs(float(mo["loss"]) - float(mp["loss"]))])
+    return rows
+
+
+def check_ddp_zero1():
+    """Explicit ZeRO-1 (reduce-scattered grads, flat-sharded masters,
+    param all-gather) tracks the replicated-optimizer DDP step."""
+    from repro.core.ddp import make_ddp_train_step, init_zero1_state
+    from repro.parallel.plan import ParallelPlan
+    from repro.data.synthetic import batch_for_model
+
+    cfg, model, opt, params = _small_dense()
+    mesh = _mesh()
+    loss_fn = lambda p, b: model.loss(p, b)
+
+    plan_z = ParallelPlan(mode="ddp", zero1=True, overlap=False)
+    step_z, _ = make_ddp_train_step(loss_fn, opt, mesh, plan_z,
+                                    params_template=params)
+    state_z = init_zero1_state(params, opt, mesh, plan_z)
+
+    plan_r = ParallelPlan(mode="ddp", overlap=False)
+    step_r, _ = make_ddp_train_step(loss_fn, opt, mesh, plan_r,
+                                    params_template=params)
+    state_r = opt.init(params)
+
+    losses_z, losses_r = [], []
+    for i in range(3):
+        batch = {k: jnp.asarray(v)
+                 for k, v in batch_for_model(cfg, "train", i, 8, 32).items()}
+        state_z, mz = step_z(state_z, batch)
+        state_r, mr = step_r(state_r, batch)
+        losses_z.append(float(mz["loss"]))
+        losses_r.append(float(mr["loss"]))
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(state_z["params"]),
+        jax.tree_util.tree_leaves(state_r["params"])))
+    return err, losses_z, losses_r
+
+
+def check_fp8_prescale():
+    """Folding the 1/n_shards mean before the compressed cross-pod phase
+    keeps fp8 wire values in range; dividing after decompression saturates
+    e4m3 (max 448 -> NaN) on pod-sum-magnitude values."""
+    from repro.core.hfreduce import hfreduce
+    from repro.core.compression import fp8_psum
+
+    mesh = _mesh()
+    rng = np.random.default_rng(7)
+    # per-shard grads ~150: the intra-pod reduce-scatter sums 4 shards
+    # (~600), beyond e4m3's 448 — only the pre-scaled mean survives fp8.
+    x = jnp.asarray(150.0 + rng.standard_normal((8, 1024)), jnp.float32)
+    ref = np.asarray(jnp.mean(x, axis=0))
+    scale = np.abs(ref).max()
+
+    def fold(v):
+        return hfreduce(v[0], strong_axis="data", weak_axis="pod",
+                        weak_psum=fp8_psum, prescale=1.0 / 8.0)
+
+    def after(v):
+        return hfreduce(v[0], strong_axis="data", weak_axis="pod",
+                        weak_psum=fp8_psum) / 8.0
+
+    spec = P(("pod", "data"))
+    out_fold = np.asarray(shard_map(fold, mesh=mesh, in_specs=spec,
+                                    out_specs=P(), check_rep=False)(x))
+    out_after = np.asarray(shard_map(after, mesh=mesh, in_specs=spec,
+                                     out_specs=P(), check_rep=False)(x))
+    err_fold = float(np.max(np.abs(out_fold - ref)) / scale)
+    err_after = float(np.max(np.abs(out_after - ref)) / scale)
+    if not np.isfinite(err_after):
+        err_after = 1e9       # e4m3 overflow -> NaN; report as huge
+    return err_fold, err_after
 
 
 def check_pipeline():
@@ -192,6 +306,55 @@ def check_pipeline():
     g_seq = jax.grad(loss_seq)(W)
     grad_err = float(jnp.max(jnp.abs(g_pp - g_seq)))
     return fwd_err, grad_err
+
+
+def check_pp_train():
+    """GPipe and 1F1B pipelined train steps (HFReduce grad sync over
+    ("pod","data")) track the single-stage loss trajectory over 5 steps,
+    for two microbatch counts."""
+    from repro.configs.base import ParallelConfig
+    from repro.parallel.plan import ParallelPlan, make_train_step
+    from repro.data.synthetic import batch_for_model
+    import repro.train_lib as tl
+
+    cfg, model, opt, params = _small_dense()
+    state0 = opt.init(params)
+    mesh = jax.make_mesh((2, 2, 2), ("pipe", "pod", "data"))
+
+    def fetch(i):
+        return {k: jnp.asarray(v)
+                for k, v in batch_for_model(cfg, "train", i, 16, 32).items()}
+
+    pcfg = ParallelConfig(tp=1, fsdp=False, batch_axes=())
+    ref_step = jax.jit(tl.make_train_step(model, opt, pcfg, mesh))
+    ref = jax.tree_util.tree_map(jnp.copy, state0)
+    ref_losses = []
+    for i in range(5):
+        ref, mets = ref_step(ref, fetch(i))
+        ref_losses.append(float(mets["loss"]))
+
+    out = {"ref_losses": ref_losses}
+    for schedule in ("gpipe", "1f1b"):
+        for m in (2, 4):
+            plan = ParallelPlan(mode="pp", pp_schedule=schedule,
+                                pp_microbatches=m)
+            step = make_train_step(plan, model, opt, mesh,
+                                   params_template=params)
+            st = jax.tree_util.tree_map(jnp.copy, state0)
+            losses = []
+            for i in range(5):
+                st, mets = step(st, fetch(i))
+                losses.append(float(mets["loss"]))
+            loss_err = max(abs(a - b)
+                           for a, b in zip(losses, ref_losses))
+            master_err = max(float(jnp.max(jnp.abs(a - b)))
+                             for a, b in zip(
+                jax.tree_util.tree_leaves(st["master"]),
+                jax.tree_util.tree_leaves(ref["master"])))
+            out[f"{schedule}_m{m}"] = {"loss_err": loss_err,
+                                       "master_err": master_err,
+                                       "losses": losses}
+    return out
 
 
 def check_elastic_remesh():
@@ -262,7 +425,12 @@ def main():
     (out["ddp_vs_ref_err"], out["ddp_loss"],
      out["ref_loss"]) = check_ddp_step()
     out["ddp_int8_losses"] = check_ddp_compressed()
+    out["ddp_overlap"] = check_ddp_overlap()
+    (out["zero1_err"], out["zero1_losses"],
+     out["zero1_ref_losses"]) = check_ddp_zero1()
+    out["fp8_fold_err"], out["fp8_after_err"] = check_fp8_prescale()
     out["pp_fwd_err"], out["pp_grad_err"] = check_pipeline()
+    out["pp_train"] = check_pp_train()
     out["elastic_remesh_err"] = check_elastic_remesh()
     out["n_devices"] = len(jax.devices())
     print("MULTIDEV_JSON:" + json.dumps(out))

@@ -5,6 +5,12 @@ schedule (DESIGN.md §4): FSDP all-gathers stay intra-pod, gradients cross
 the pod axis once per step as 1/16-size shards, the optimizer updates
 pod-sharded fp32 masters (ZeRO-1) and all-gathers bf16 params over "pod"
 once.  ``launch/dryrun.py`` lowers these steps for every (arch x shape).
+
+This is one of three executors behind ``parallel/plan.py`` (DESIGN.md §3):
+``ParallelPlan(mode="gspmd")`` lowers to the ``ParallelConfig`` consumed
+here, while ``mode="ddp"``/``mode="pp"`` select the explicit shard_map
+paths in ``core/ddp.py`` and ``parallel/pp.py``.  New callers should go
+through ``repro.parallel.plan.make_train_step``.
 """
 from __future__ import annotations
 

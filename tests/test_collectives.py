@@ -19,7 +19,7 @@ def _run_multidev():
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     out = subprocess.run(
         [sys.executable, "-m", "repro.testing.multidev"],
-        capture_output=True, text=True, env=env, timeout=900)
+        capture_output=True, text=True, env=env, timeout=1800)
     assert out.returncode == 0, out.stderr[-3000:]
     for line in out.stdout.splitlines():
         if line.startswith("MULTIDEV_JSON:"):
@@ -60,10 +60,60 @@ def test_ddp_int8_compression_trains():
     assert losses[-1] < losses[0] + 0.05  # not diverging
 
 
+def test_ddp_overlap_matches_posthoc():
+    """In-backward per-bucket HFReduce hooks == post-hoc whole-tree sync,
+    for >=2 bucket budgets and compress on/off (identical bucket slices +
+    wire dtype -> identical collectives -> identical gradients)."""
+    r = _run_multidev()
+    rows = r["ddp_overlap"]
+    assert len(rows) == 4
+    budgets = {row[0] for row in rows}
+    assert len(budgets) >= 2, "want >=2 bucket budgets"
+    assert any(row[1] == "int8" for row in rows), "want a compressed case"
+    assert any(row[2] > 1 for row in rows), \
+        "small budget should produce multiple buckets"
+    for bucket_bytes, compress, n_buckets, err, loss_err in rows:
+        assert err < 1e-6, \
+            (bucket_bytes, compress, n_buckets, err)
+        assert loss_err < 1e-6, (bucket_bytes, compress, loss_err)
+
+
+def test_ddp_zero1_matches_replicated():
+    """Explicit ZeRO-1 (scatter / flat shard update / param gather) tracks
+    the replicated-optimizer step over 3 steps."""
+    r = _run_multidev()
+    assert r["zero1_err"] < 1e-4
+    for lz, lr_ in zip(r["zero1_losses"], r["zero1_ref_losses"]):
+        assert abs(lz - lr_) < 1e-3
+
+
+def test_fp8_mean_fold_regression():
+    """The 1/n_shards mean folded before the compressed weak phase keeps
+    fp8 wire values finite; dividing after decompression overflows e4m3."""
+    r = _run_multidev()
+    assert r["fp8_fold_err"] < 0.08, "pre-scaled fp8 sync should be accurate"
+    assert r["fp8_after_err"] > 10 * r["fp8_fold_err"], \
+        "post-hoc divide should be visibly worse (saturated/NaN wire)"
+
+
 def test_pipeline_parallel_matches_sequential():
     r = _run_multidev()
     assert r["pp_fwd_err"] < 1e-5, "GPipe forward != sequential"
     assert r["pp_grad_err"] < 1e-4, "PP backward (ppermute transpose) wrong"
+
+
+def test_pp_train_step_loss_trajectory():
+    """GPipe + 1F1B pipelined train steps (HFReduce sync over
+    ("pod","data")) match the single-stage loss trajectory over 5 steps
+    for 2 microbatch counts."""
+    r = _run_multidev()
+    pp = r["pp_train"]
+    assert len(pp["ref_losses"]) == 5
+    for schedule in ("gpipe", "1f1b"):
+        for m in (2, 4):
+            case = pp[f"{schedule}_m{m}"]
+            assert case["loss_err"] < 1e-4, (schedule, m, case)
+            assert case["master_err"] < 5e-3, (schedule, m, case)
 
 
 def test_elastic_remesh_continuation():

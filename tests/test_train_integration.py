@@ -16,6 +16,21 @@ def test_training_reduces_loss():
     assert losses[-1] < losses[0] - 0.05, (losses[0], losses[-1])
 
 
+def test_parallel_flag_and_deprecated_ddp_alias():
+    """--parallel ddp selects the explicit plan path (single device:
+    degenerate 1x1 ("pod","data") mesh); --ddp still works but warns."""
+    from repro.launch.train import main
+    losses = main(["--arch", "phi4-mini-3.8b", "--smoke", "--steps", "3",
+                   "--batch", "4", "--seq", "32", "--parallel", "ddp",
+                   "--log-every", "100"])
+    assert len(losses) == 3
+    with pytest.warns(DeprecationWarning, match="--parallel ddp"):
+        alias = main(["--arch", "phi4-mini-3.8b", "--smoke", "--steps",
+                      "2", "--batch", "4", "--seq", "32", "--ddp",
+                      "--log-every", "100"])
+    assert alias[0] == pytest.approx(losses[0], abs=1e-6)
+
+
 def test_ckpt_resume_bitexact(tmp_path):
     """5 steps + save + restore + 5 steps == 10 straight steps."""
     from repro.configs.base import ParallelConfig
