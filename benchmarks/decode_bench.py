@@ -1,13 +1,20 @@
-"""Decode suite: dense lockstep decode vs the paged serving engine.
+"""Decode suite: dense lockstep decode vs the paged serving engine,
+plus a time-to-first-token (TTFT) vs ``prefill_chunk`` sweep.
 
 Per (batch x context): wall-clock per decode step for (a) the dense
-``model.decode_step`` loop against a contiguous grown cache and (b) a
+lockstep loop — a T=1 chunk through ``model.forward`` against a
+contiguous SeqState sized for the whole trace — and (b) a
 ``ServingEngine`` step (paged pool + block tables + flash decode,
 including the engine's host-side bookkeeping), plus an analytic HBM
 bytes/token model: the dense path streams the *allocated* cache
-(capacity, padded/grown) through the attention core every step for
-every sequence, while the paged path reads only the blocks a sequence
-actually owns.  Emits CSV rows and writes ``BENCH_decode.json``.
+(capacity) through the attention core every step for every sequence,
+while the paged path reads only the blocks a sequence actually owns.
+
+The TTFT sweep admits one long-prompt request per ``prefill_chunk``
+setting (0 = one bucketed whole-prompt chunk) and measures the
+wall-clock until its first token exists plus the number of prefill
+trace events — the O(log)-compile story chunked prefill buys.  Emits
+CSV rows and writes ``BENCH_decode.json``.
 
 Off-TPU the paged attention runs the jnp gather ref (and the timings
 measure XLA CPU); on TPU it compiles the Pallas flash-decode kernel.
@@ -34,9 +41,11 @@ def _cases():
     if jax.default_backend() == "tpu" and \
             os.environ.get("REPRO_BENCH_SMOKE") != "1":
         return dict(batches=(8, 32), prompt=512, gen=64, block=64,
-                    n_layers=4, repeat=20)
+                    n_layers=4, repeat=20, ttft_prompt=512,
+                    ttft_chunks=(0, 64, 128, 256))
     return dict(batches=(2, 4), prompt=18, gen=6, block=16,
-                n_layers=2, repeat=2)
+                n_layers=2, repeat=2, ttft_prompt=30,
+                ttft_chunks=(0, 8, 16))
 
 
 def _hbm_per_token(cfg, *, dense_cap, paged_blocks, block):
@@ -45,11 +54,44 @@ def _hbm_per_token(cfg, *, dense_cap, paged_blocks, block):
     return dense_cap * per_pos, paged_blocks * block * per_pos
 
 
+def _ttft_sweep(model, params, c):
+    """Time-to-first-token vs prefill chunk size for a long prompt
+    arriving while another request is already decoding — the scenario
+    interleaved chunked prefill exists for (chunk > 0 spreads the
+    prompt over engine steps between decode ticks instead of stalling
+    the running batch for one monolithic prefill)."""
+    from repro.serving import ServingEngine
+
+    prompt = np.arange(c["ttft_prompt"], dtype=np.int32) % 97
+    block = c["block"]
+    n_blocks = 6 * (-(-len(prompt) // block)) + 1
+    rows = []
+    for chunk in c["ttft_chunks"]:
+        eng = ServingEngine(model, params, n_blocks=n_blocks,
+                            block_size=block, max_slots=2,
+                            prefill_chunk=chunk, share_prefixes=False)
+        # a long-running foreground request occupies a slot so the
+        # measured admission goes through the interleaved path
+        eng.submit(prompt[: max(len(prompt) // 4, 1)], 10_000)
+        eng.step()                                 # admit + compile decode
+        rid = eng.submit(prompt, 2)
+        t0 = time.perf_counter()
+        while not (eng._done.get(rid) or
+                   any(r is not None and r.rid == rid for r in eng._slots)):
+            eng.step()
+        ttft = time.perf_counter() - t0
+        rows.append({"prefill_chunk": chunk, "prompt": len(prompt),
+                     "ttft_s": ttft,
+                     "prefill_traces": eng.prefill_traces})
+        emit(f"decode.ttft.chunk{chunk}", ttft * 1e6,
+             f"traces={eng.prefill_traces}")
+    return rows
+
+
 def run():
     from repro.configs.registry import smoke_config
     from repro.data.synthetic import batch_for_model
     from repro.models import build_model
-    from repro.serve_lib import grow_cache_geometric
     from repro.serving import ServingEngine
 
     c = _cases()
@@ -61,30 +103,33 @@ def run():
     impl = "kernel" if jax.default_backend() == "tpu" else "ref"
     records = []
 
+    fwd = jax.jit(model.forward, static_argnames=("fresh",))
     for b in c["batches"]:
         prompt, gen, block = c["prompt"], c["gen"], c["block"]
         batch = {k: jnp.asarray(v) for k, v in
                  batch_for_model(cfg, "prefill", 0, b, prompt).items()}
 
-        # -- dense lockstep --
-        # grow for every timed step (1 warmup + (gen-1)*repeat), not just
-        # gen: an undersized cache would clamp writes and time a
-        # corrupted decode
+        # -- dense lockstep: capacity covers every timed step up front
+        # (1 warmup + (gen-1)*repeat), so no mid-loop growth/recompile --
         total_steps = 1 + (gen - 1) * c["repeat"]
-        cache, logits = jax.jit(model.prefill)(params, batch)
-        cache = grow_cache_geometric(cache, total_steps + 1)
-        decode = jax.jit(model.decode_step)
+        dense_cap = prompt + total_steps + 1
+        tokens, positions, embeds = model.prompt_inputs(params, batch)
+        state = model.init_seq_state(params, dense_cap, batch=batch,
+                                     batch_size=b)
+        state, logits = fwd(params, state, tokens, positions,
+                            embeds=embeds, fresh=True)
         toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        cache, logits = decode(params, cache, toks)       # compile
+        pos = jnp.full((b, 1), prompt, jnp.int32)
+        state, logits = fwd(params, state, toks[:, None], pos)  # compile
         jax.block_until_ready(logits)
         steps = total_steps - 1
         t0 = time.perf_counter()
-        for _ in range(steps):
-            cache, logits = decode(params, cache, toks)
+        for i in range(steps):
+            pos = jnp.full((b, 1), prompt + 1 + i, jnp.int32)
+            state, logits = fwd(params, state, toks[:, None], pos)
             toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         jax.block_until_ready(logits)
         dense_us = (time.perf_counter() - t0) / steps * 1e6
-        dense_cap = cache["k"].shape[2]
 
         # -- paged engine (admission excluded: time steady-state steps;
         # min_table_width pins one compiled step shape so no bucket-
@@ -125,11 +170,14 @@ def run():
         emit(f"decode.b{b}.paged", paged_us,
              f"hbm_per_tok={hbm_paged} impl={impl}")
 
-    payload = {"backend": jax.default_backend(), "cases": records}
+    ttft = _ttft_sweep(model, params, c)
+    payload = {"backend": jax.default_backend(), "cases": records,
+               "ttft_vs_prefill_chunk": ttft}
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)
-    emit("decode.bench_written", 0, f"{OUT_PATH}({len(records)}cases)")
-    return {"ok": True, "cases": records}
+    emit("decode.bench_written", 0,
+         f"{OUT_PATH}({len(records)}cases+{len(ttft)}ttft)")
+    return {"ok": True, "cases": records, "ttft": ttft}
 
 
 if __name__ == "__main__":

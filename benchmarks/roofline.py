@@ -39,6 +39,9 @@ def model_flops_per_chip(arch: str, shape_name: str, n_chips: int) -> float:
         if cfg.is_encoder_decoder:
             tokens *= 2
         return 2.0 * n_active * tokens / n_chips
+    if shape.kind == "chunk":
+        # a prefill chunk: shape.chunk tokens per sequence per step
+        return 2.0 * n_active * shape.global_batch * shape.chunk / n_chips
     # decode: one token per sequence
     return 2.0 * n_active * shape.global_batch / n_chips
 

@@ -38,19 +38,23 @@ def main():
         state, metrics = step(state, batch)
         print(f"  step {i}: loss={float(metrics['loss']):.4f}")
 
-    # 3. serve: prefill a prompt, decode a few tokens
+    # 3. serve through the chunk-oriented SeqState API: the prompt is
+    #    one fresh chunk, every decode step a T=1 chunk (any chunking
+    #    in between yields the same tokens)
     params = state["params"]
     pb = {k: jnp.asarray(v) for k, v in
           batch_for_model(cfg, "prefill", 0, 2, 16).items()}
-    cache, logits = jax.jit(model.prefill)(params, pb)
-    cache = jax.tree_util.tree_map(
-        lambda x: jnp.pad(x, [(0, 0)] * 2 + [(0, 8)] + [(0, 0)] * 2)
-        if getattr(x, "ndim", 0) == 5 else x, cache)
+    tokens, positions, embeds = model.prompt_inputs(params, pb)
+    b, s = positions.shape
+    seq = model.init_seq_state(params, s + 8, batch=pb, batch_size=b)
+    fwd = jax.jit(model.forward, static_argnames=("fresh",))
+    seq, logits = fwd(params, seq, tokens, positions, embeds=embeds,
+                      fresh=True)
     toks = jnp.argmax(logits, -1).astype(jnp.int32)
     out = [toks]
-    decode = jax.jit(model.decode_step)
-    for _ in range(7):
-        cache, logits = decode(params, cache, toks)
+    for i in range(7):
+        pos = jnp.full((b, 1), s + i, jnp.int32)
+        seq, logits = fwd(params, seq, toks[:, None], pos)
         toks = jnp.argmax(logits, -1).astype(jnp.int32)
         out.append(toks)
     print("generated:", jnp.stack(out, 1).tolist())

@@ -193,9 +193,12 @@ def _count_params(cfg: ModelConfig, active_only: bool) -> int:
 @dataclasses.dataclass(frozen=True)
 class ShapeConfig:
     name: str
-    seq_len: int
+    seq_len: int                 # train/prefill: tokens; decode/chunk: the
+                                 # SeqState sequence capacity
     global_batch: int
-    kind: str                    # "train" | "prefill" | "decode"
+    kind: str                    # "train" | "prefill" | "decode" | "chunk"
+    chunk: int = 0               # kind="chunk": tokens per forward() call
+                                 # (a prefill chunk; decode is chunk=1)
 
 
 SHAPES = {
@@ -203,6 +206,10 @@ SHAPES = {
     "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
     "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
     "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+    # chunked prefill: a (b, chunk) slice of the prompt advancing a
+    # SeqState with seq_len capacity (launch/dryrun.py lowers it with the
+    # same serve step as decode — decode is just chunk=1)
+    "chunk_2k": ShapeConfig("chunk_2k", 32_768, 32, "chunk", chunk=2048),
 }
 
 

@@ -25,9 +25,12 @@ import traceback
 def input_specs(arch: str, shape_name: str):
     """ShapeDtypeStruct stand-ins for every model input of a cell.
 
-    train:   {"state": TrainState, "batch": {...}}
-    prefill: {"params": params, "batch": {...}}
-    decode:  {"params": params, "cache": {...}, "tokens": (b,)}
+    train:        {"state": TrainState, "batch": {...}}
+    prefill:      {"params": params, "batch": {...}}
+    decode/chunk: {"params": params, "seq_state": SeqState,
+                   "tokens": (b, T), "positions": (b, T)} — the one
+                  chunk-oriented serve step (decode is T=1, a prefill
+                  chunk is T=shape.chunk)
     """
     from repro import train_lib
     from repro.configs.registry import get_arch, get_shape
@@ -43,9 +46,10 @@ def input_specs(arch: str, shape_name: str):
     if shape.kind == "prefill":
         return {"params": train_lib.abstract_params(model),
                 "batch": model.batch_specs(shape)}
+    bspecs = model.batch_specs(shape)
     return {"params": train_lib.abstract_params(model),
-            "cache": model.cache_specs(shape),
-            "tokens": model.batch_specs(shape)["tokens"]}
+            "seq_state": model.seq_state_specs(shape),
+            "tokens": bspecs["tokens"], "positions": bspecs["positions"]}
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
@@ -98,18 +102,21 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                          in_shardings=(named(pspec), named(bspec)),
                          out_shardings=(named(cspec), None))
         args = (specs["params"], specs["batch"])
-    else:
+    else:   # decode / chunk: one chunk of the serve step
         step = train_lib.make_serve_step(model, pcfg, mesh)
         pspec = train_lib.param_pspecs(model, pcfg, mesh)
-        cspec = train_lib.cache_pspecs(model, shape, resolver)
+        cspec = train_lib.seq_state_pspecs(model, shape, resolver)
         tspec = train_lib.batch_pspecs(
-            {"tokens": specs["tokens"]}, resolver)["tokens"]
+            {"tokens": specs["tokens"],
+             "positions": specs["positions"]}, resolver)
         jitted = jax.jit(step,
                          in_shardings=(named(pspec), named(cspec),
-                                       named(tspec)),
+                                       named(tspec["tokens"]),
+                                       named(tspec["positions"])),
                          out_shardings=(named(cspec), None),
                          donate_argnums=(1,))
-        args = (specs["params"], specs["cache"], specs["tokens"])
+        args = (specs["params"], specs["seq_state"], specs["tokens"],
+                specs["positions"])
 
     with mesh:
         lowered = jitted.lower(*args)
@@ -127,6 +134,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     print("memory_analysis:", mem_info)
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # older jax: one dict per device
+        cost = cost[0] if cost else {}
     cost_info = {k: float(v) for k, v in cost.items()
                  if isinstance(v, (int, float)) and k in
                  ("flops", "bytes accessed", "transcendentals",

@@ -4,7 +4,8 @@ continuous-batching engine (``--decode-impl paged``).
   PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b --smoke \\
       --batch 4 --prompt-len 32 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1.5-7b \\
-      --smoke --decode-impl paged --stagger 2 --block-size 16
+      --smoke --decode-impl paged --stagger 2 --block-size 16 \\
+      --prefill-chunk 8 --temperature 0.8 --top-k 40
 """
 from __future__ import annotations
 
@@ -33,6 +34,14 @@ def main(argv=None):
                     help="paged: pool size in blocks (0 = sized to fit)")
     ap.add_argument("--stagger", type=int, default=0,
                     help="paged: admit request i at engine step i*stagger")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="paged: prefill in chunks of this many tokens, "
+                         "interleaved with decode ticks (0 = one bucketed "
+                         "whole-prompt chunk)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="paged: sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="paged: top-k truncation (0 = full vocab)")
     args = ap.parse_args(argv)
 
     from repro.configs.registry import get_arch, smoke_config
@@ -55,20 +64,27 @@ def main(argv=None):
 
 
 def _serve_dense(model, params, batch, args):
-    # NOTE on cache sizing: the attention caches returned by prefill are
-    # sized to the prompt; grow them to cover prompt+gen before decoding.
-    from repro.serve_lib import grow_cache_geometric
+    """Lockstep decode through the chunk-oriented API: the prompt is one
+    fresh chunk, every decode step a T=1 chunk; the SeqState's capacity
+    covers prompt + gen up front (no mid-decode growth)."""
+    fwd = jax.jit(model.forward, static_argnames=("fresh",))
+    tokens, positions, embeds = model.prompt_inputs(params, batch)
+    b, s = positions.shape
     t0 = time.time()
-    cache, logits = jax.jit(model.prefill)(params, batch)
-    cache = grow_cache_geometric(cache, args.gen)
+    state = jax.jit(model.init_seq_state,
+                    static_argnames=("max_len", "batch_size", "dtype"))(
+        params, max_len=s + args.gen, batch=batch, batch_size=b)
+    state, logits = fwd(params, state, tokens, positions,
+                        embeds=embeds, fresh=True)
+    jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
-    decode = jax.jit(model.decode_step)
     toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     out = [np.asarray(toks)]
     t0 = time.time()
-    for _ in range(args.gen - 1):
-        cache, logits = decode(params, cache, toks)
+    for i in range(args.gen - 1):
+        pos = jnp.full((b, 1), s + i, jnp.int32)
+        state, logits = fwd(params, state, toks[:, None], pos)
         toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out.append(np.asarray(toks))
     jax.block_until_ready(logits)
@@ -95,7 +111,10 @@ def _serve_paged(model, params, batch, args):
         * 2 + 1)
     engine = ServingEngine(model, params, n_blocks=n_blocks,
                            block_size=args.block_size,
-                           max_slots=args.batch)
+                           max_slots=args.batch,
+                           prefill_chunk=args.prefill_chunk,
+                           temperature=args.temperature,
+                           top_k=args.top_k, seed=args.seed)
     rids = [engine.submit(row, args.gen, arrival=i * args.stagger)
             for i, row in enumerate(tokens)]
     t0 = time.time()
@@ -103,7 +122,9 @@ def _serve_paged(model, params, batch, args):
     t_total = time.time() - t0
 
     produced = args.batch * args.gen
-    print(f"paged decode_impl: {produced} tokens "
+    mode = (f"sampled(T={args.temperature},k={args.top_k})"
+            if args.temperature > 0 else "greedy")
+    print(f"paged decode_impl ({mode}): {produced} tokens "
           f"({args.batch} seeded by prefill logits) over "
           f"{engine.step_count} engine steps in {t_total:.3f}s total "
           f"(engine steps include prefill admissions — "

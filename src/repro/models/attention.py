@@ -192,30 +192,34 @@ def attention_core(cfg, q, k, v, *, causal=True, q_offset=0,
 # ------------------------------- KV cache ----------------------------------
 
 
-def init_cache_defs(cfg, batch: int, max_len: int, layers: int,
-                    dtype="bfloat16"):
-    """ShapeDtypeStructs for a decode KV cache (used by input_specs)."""
-    kv, hd = cfg.n_kv_heads, cfg.head_dim
-    return {
-        "k": jax.ShapeDtypeStruct((layers, batch, max_len, kv, hd), dtype),
-        "v": jax.ShapeDtypeStruct((layers, batch, max_len, kv, hd), dtype),
-        "index": jax.ShapeDtypeStruct((), "int32"),
-    }
+def chunk_cache_update(cache_k, cache_v, k_new, v_new, positions):
+    """Scatter a chunk of K/V into a dense cache at per-slot positions.
 
-
-def cache_update(cache_k, cache_v, k_new, v_new, index):
-    """Insert (b, 1, kv, hd) at position ``index`` along the seq dim."""
-    ck = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
-                                      (0, index, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
-                                      (0, index, 0, 0))
+    cache_k/v: (b, S, kv, hd); k_new/v_new: (b, T, kv, hd); positions
+    (b, T) int32 — the absolute position of every token, **per slot**
+    (no shared scalar index: slot i may be 3 tokens into its prompt
+    while slot j is 500 deep).  Negative positions mark padding tokens:
+    their writes are dropped (sanitized to an out-of-bounds index).
+    """
+    S = cache_k.shape[1]
+    pw = jnp.where(positions >= 0, positions, S)        # OOB -> dropped
+    bidx = jnp.arange(cache_k.shape[0])[:, None]
+    ck = cache_k.at[bidx, pw].set(k_new.astype(cache_k.dtype), mode="drop")
+    cv = cache_v.at[bidx, pw].set(v_new.astype(cache_v.dtype), mode="drop")
     return ck, cv
 
 
-def decode_attention(cfg, q, cache_k, cache_v, index):
-    """One-token attention against a (possibly seq-sharded) cache.
+def chunk_attention(cfg, q, cache_k, cache_v, positions):
+    """Chunk-of-T-tokens attention against a dense cache (T >= 1).
 
-    q: (b, 1, h, hd); cache_k/v: (b, S, kv, hd); positions < index+1 valid.
+    q: (b, T, h, hd); cache_k/v: (b, S, kv, hd) **already containing
+    this chunk's K/V** (write-then-attend); positions (b, T) absolute
+    per-slot query positions, negative = padding.  Each query attends
+    every cache position ``<= `` its own absolute position, which is
+    simultaneously today's decode (T=1, one valid key prefix), a
+    mid-prompt prefill chunk, and — with a fresh cache — a whole
+    prompt.  Rows with no valid keys (padding) produce garbage, masked
+    out by the caller's last-token gather.
     """
     k = _broadcast_kv(cache_k, cfg.n_heads)
     v = _broadcast_kv(cache_v, cfg.n_heads)
@@ -223,13 +227,24 @@ def decode_attention(cfg, q, cache_k, cache_v, index):
     v = shard_act(v, "batch", "kv_seq", "heads", "head_dim")
     scale = cfg.head_dim ** -0.5
     s = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
-    valid = jnp.arange(k.shape[1]) <= index
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    kpos = jnp.arange(k.shape[1])
+    mask = kpos[None, None, :] <= positions[:, :, None]     # (b, T, S)
+    s = jnp.where(mask[:, None], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     return jnp.einsum("bhqs,bshk->bqhk", w, v)
 
 
 # ---------------------------- paged KV cache --------------------------------
+
+
+def paged_slot_index(block_tables, positions, block_size):
+    """Flat pool index (``block_id * bs + offset``) where each slot's
+    token at ``positions`` (b,) lands — the one place the block-table
+    address arithmetic lives."""
+    blk = jnp.take_along_axis(block_tables,
+                              (positions // block_size)[:, None],
+                              axis=1)[:, 0]
+    return blk * block_size + positions % block_size
 
 
 def paged_cache_update(k_pool, v_pool, k_new, v_new, slots):

@@ -116,13 +116,18 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array):
                             x1 * sin + x2 * cos], axis=-1)
 
 
-def sinusoidal_positions(max_len: int, d_model: int):
-    """Whisper-style fixed sinusoidal embeddings (s, d)."""
-    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
-    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+def sinusoidal_pe(positions: jax.Array, d_model: int):
+    """Whisper-style sinusoidal embeddings at arbitrary integer
+    positions: (...,) -> (..., d_model)."""
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)
     inv = jnp.exp(-jnp.log(10_000.0) * dim / (d_model // 2))
-    ang = pos * inv
+    ang = positions[..., None].astype(jnp.float32) * inv
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_positions(max_len: int, d_model: int):
+    """Fixed sinusoidal embedding table (s, d)."""
+    return sinusoidal_pe(jnp.arange(max_len), d_model)
 
 
 # ------------------------------ loss ---------------------------------------

@@ -6,17 +6,22 @@ import jax.numpy as jnp
 
 from repro.models.common import apply_norm, norm_kernel_impl
 from repro.models.params import p
-from repro.models.ssm_common import (causal_conv1d, conv_state_update,
-                                     ssd_chunked, ssd_recurrent_step)
+from repro.models.ssm_common import (causal_conv1d, conv_chunk_state,
+                                     conv_state_update, ssd_chunked,
+                                     ssd_recurrent_step)
 from repro.parallel.axes import shard_act
 
 
-def _ssd(cfg, x, a, B, C, chunk):
+def _ssd(cfg, x, a, B, C, chunk, h0=None):
     """Dispatch the chunked SSD scan on ``cfg.ssm_impl``: the fused Pallas
     custom_vjp op (forward + reverse-recurrence backward kernels) on the
     kernel/interpret paths, the jnp ``lax.scan`` ref otherwise.  Like the
     norm/gating resolvers, "auto" skips the kernel for one-token streams
-    (a pallas_call per layer for a single recurrence step)."""
+    (a pallas_call per layer for a single recurrence step).  A carried
+    initial state ``h0`` (mid-prompt prefill chunk) always takes the jnp
+    ref — the kernel has no h0 input."""
+    if h0 is not None:
+        return ssd_chunked(x, a, B, C, chunk, h0=h0)
     impl = getattr(cfg, "ssm_impl", "auto")
     if impl in ("kernel", "interpret") or (
             impl == "auto" and x.shape[1] > 1 and
@@ -100,21 +105,40 @@ def apply_mamba2(cfg, params, u):
     return _gated_out(cfg, params, y, z)
 
 
-def mamba2_prefill(cfg, params, u):
-    """Like apply but also return the streaming state for decode."""
+def mamba2_prefill(cfg, params, u, state=None):
+    """Like apply but also return the streaming state for decode.
+
+    ``state`` ({ssm (b,h,p,n), conv (b,w-1,c)}) continues a previous
+    chunk: the SSD scan starts from the carried state and the causal
+    conv window is seeded with the previous chunk's raw tail, so a
+    prompt processed in chunks reproduces the monolithic pass."""
     s = cfg.ssm
     d_in, nheads, _ = _dims(cfg)
     b, l, _ = u.shape
     z, xBC, dt, A = _project(cfg, params, u)
-    conv_state = xBC[:, -(s.conv_width - 1):, :]
+    conv_in = None if state is None else state["conv"]
+    conv_state = conv_chunk_state(conv_in, xBC, s.conv_width)
     xBC = jax.nn.silu(causal_conv1d(xBC, params["conv_w"].astype(xBC.dtype),
-                                    params["conv_b"].astype(xBC.dtype)))
+                                    params["conv_b"].astype(xBC.dtype),
+                                    state=conv_in))
     x, B, C = jnp.split(xBC, [d_in, d_in + s.state_size], axis=-1)
     xh = x.reshape(b, l, nheads, s.head_dim)
     a = dt * A
+    xd = xh * dt[..., None].astype(xh.dtype)
+    h0 = None if state is None else state["ssm"]
     chunk = min(s.chunk_size, l)
-    y, hfin = _ssd(cfg, (xh * dt[..., None].astype(xh.dtype)), a, B, C,
-                   chunk)
+    head = (l // chunk) * chunk
+    if head == l:
+        y, hfin = _ssd(cfg, xd, a, B, C, chunk, h0=h0)
+    else:
+        # ragged tail (l not a chunk multiple — any prompt length must
+        # serve): scan the divisible head, then one short chunk carrying
+        # the state
+        y1, h1 = _ssd(cfg, xd[:, :head], a[:, :head], B[:, :head],
+                      C[:, :head], chunk, h0=h0)
+        y2, hfin = ssd_chunked(xd[:, head:], a[:, head:], B[:, head:],
+                               C[:, head:], l - head, h0=h1)
+        y = jnp.concatenate([y1, y2], axis=1)
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(b, l, d_in)
     out = _gated_out(cfg, params, y, z)

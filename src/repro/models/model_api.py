@@ -1,13 +1,31 @@
-"""Uniform model API over the zoo.
+"""Uniform chunk-oriented model API over the zoo.
 
-Every model exposes:
-  param_defs() / init(rng)
-  loss(params, batch) -> (scalar, metrics)
-  prefill(params, batch) -> (cache, logits_last)
-  decode_step(params, cache, tokens) -> (cache, logits)
-  batch_specs(shape) / cache_specs(shape) -> ShapeDtypeStruct trees
+Every model exposes one state-carrying serving call (DESIGN.md §8):
 
-``build_model(cfg)`` dispatches on ``cfg.family``.
+  init_seq_state(params, max_len, ...) -> SeqState
+  forward(params, state, tokens, positions) -> (SeqState, logits)
+
+``tokens`` is (b, T) for **any** T >= 1: T = prompt length is a
+monolithic prefill, T = 1 is a decode step, and anything between is a
+prefill *chunk*.  ``positions`` (b, T) carries each token's absolute
+position **per slot** (no shared scalar index), so late-arriving slots
+and mid-prompt chunks are first-class; negative positions mark padding
+(dropped from the cache, excluded from the position-indexed last-token
+logit gather).  The ``SeqState`` pytree unifies every family's
+sequence state behind that one contract: dense KV, paged block pools
+(with ``lengths``/``block_tables`` *inside* the state), Zamba's
+mamba+KV hybrid state, xLSTM block states, and Whisper cross-KV.
+Leaves a model does not recognize (e.g. the serving engine's per-slot
+PRNG keys) pass through untouched.
+
+``seq_state_specs(shape)`` / ``seq_state_axes(shape)`` describe the
+state layout for AOT lowering; ``prefill`` / ``decode_step`` /
+``paged_decode_step`` remain as thin deprecation shims over
+``forward`` (nothing in src/ outside this module may call them — CI
+guards it).
+
+Training API is unchanged: param_defs() / init(rng) / loss(params,
+batch).  ``build_model(cfg)`` dispatches on ``cfg.family``.
 """
 from __future__ import annotations
 
@@ -20,11 +38,10 @@ from repro.models import moe as moe_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models import zamba as zamba_mod
 from repro.models.common import (apply_norm, cross_entropy, norm_defs,
-                                 sinusoidal_positions)
+                                 sinusoidal_pe, sinusoidal_positions)
 from repro.models.params import init_tree, p, shape_tree
-from repro.models.transformer import (decode_layer, dense_layer, layer_defs,
-                                      paged_decode_layer, prefill_layer,
-                                      stack_defs, _sub)
+from repro.models.transformer import (chunk_layer, dense_layer, layer_defs,
+                                      paged_decode_layer, stack_defs, _sub)
 from repro.parallel.axes import shard_act
 
 WHISPER_DECODE_ENC_FRAMES = 1500
@@ -38,6 +55,17 @@ def _embed_defs(cfg):
                             ("embed", "vocab"))
     defs.update({f"final_{k}": v for k, v in norm_defs(cfg).items()})
     return defs
+
+
+def arange_positions(batch: int, length: int, offset: int = 0):
+    """Lockstep (b, T) positions ``offset + [0..T)`` for every slot."""
+    return jnp.broadcast_to(jnp.arange(offset, offset + length,
+                                       dtype=jnp.int32), (batch, length))
+
+
+def last_valid_index(positions):
+    """Index of each slot's last non-padding token within the chunk."""
+    return jnp.maximum(jnp.sum(positions >= 0, axis=1) - 1, 0)
 
 
 class BaseLM:
@@ -66,6 +94,13 @@ class BaseLM:
         logits = x @ w.astype(x.dtype)
         return shard_act(logits, "batch", "seq", "vocab")
 
+    def _gather_logits(self, params, x, positions):
+        """Position-indexed last-token logit gather: project only each
+        slot's last valid chunk row to (b, V)."""
+        idx = last_valid_index(positions)
+        xl = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        return self._logits(params, xl)[:, 0]
+
     def _ce(self, params, x, labels, mask=None):
         logits = self._logits(params, x)
         return cross_entropy(logits, labels, mask)
@@ -78,11 +113,65 @@ class BaseLM:
     def loss(self, params, batch):
         raise NotImplementedError
 
-    def prefill(self, params, batch):
+    def init_seq_state(self, params, max_len, *, batch=None,
+                       batch_size=None, dtype="bfloat16"):
+        """Fresh SeqState for ``batch_size`` slots and ``max_len`` cache
+        capacity.  Families with non-token inputs (Whisper frames, VLM
+        patches) take them via ``batch``."""
         raise NotImplementedError
 
-    def decode_step(self, params, cache, tokens):
+    @property
+    def prefill_padding_ok(self) -> bool:
+        """Whether padding tokens (positions < 0) may ride through a
+        chunk: True only when every sequence mixer is position-masked
+        attention (dropped writes, masked reads).  A carried recurrence
+        (SSD, xLSTM) would absorb the padding into its state, so those
+        families require exact-length chunks."""
+        return False
+
+    def forward(self, params, state, tokens, positions, *, embeds=None,
+                fresh=False):
+        """Advance ``state`` by one chunk of T >= 1 tokens per slot.
+
+        tokens (b, T) int32 (ignored when ``embeds`` (b, T, d) is
+        given); positions (b, T) int32 absolute per-slot positions,
+        negative = padding.  Returns (state', logits (b, V)) with
+        logits gathered at each slot's last valid position.
+
+        ``fresh=True`` is a static caller promise that ``state`` is
+        factory-fresh and valid positions are lockstep arange rows —
+        models may then take the fused whole-sequence paths (flash
+        attention, chunked SSD kernels).  Recurrent families reject
+        padding; attention families tolerate trailing padding (their
+        dropped writes are later overwritten by decode).
+        """
         raise NotImplementedError
+
+    def prompt_inputs(self, params, batch):
+        """(tokens, positions, embeds) for a whole-prompt chunk."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        return tokens, arange_positions(b, s), None
+
+    def prompt_length(self, batch) -> int:
+        """Sequence positions a prompt occupies (incl. non-token rows
+        such as VLM patches) — where decode continues from."""
+        return batch["tokens"].shape[1]
+
+    def _paged_chunk_driver(self, params, state, tokens, positions,
+                            step_token):
+        """Shared T-step scaffolding for the paged forward: embed token
+        t, run ``step_token(x, pos) -> x`` (which advances the pools /
+        recurrent carries in its closure), then gather per-slot
+        last-valid logits.  Returns (logits, lengths)."""
+        T = positions.shape[1]
+        per_step = [step_token(self._embed(params, tokens[:, t])[:, None, :],
+                               positions[:, t])
+                    for t in range(T)]
+        x = jnp.concatenate(per_step, axis=1) if T > 1 else per_step[0]
+        logits = self._gather_logits(params, x, positions)
+        lengths = jnp.max(positions, axis=1).astype(jnp.int32) + 1
+        return logits, lengths
 
     def batch_specs(self, shape: ShapeConfig):
         b, s = shape.global_batch, shape.seq_len
@@ -91,10 +180,45 @@ class BaseLM:
                     "labels": jax.ShapeDtypeStruct((b, s), "int32")}
         if shape.kind == "prefill":
             return {"tokens": jax.ShapeDtypeStruct((b, s), "int32")}
-        return {"tokens": jax.ShapeDtypeStruct((b,), "int32")}
+        t = shape.chunk if shape.kind == "chunk" else 1
+        return {"tokens": jax.ShapeDtypeStruct((b, t), "int32"),
+                "positions": jax.ShapeDtypeStruct((b, t), "int32")}
+
+    def seq_state_specs(self, shape: ShapeConfig):
+        raise NotImplementedError
+
+    def seq_state_axes(self, shape: ShapeConfig):
+        raise NotImplementedError
+
+    # -- deprecated shims ---------------------------------------------------
+    # The pre-chunk API.  Kept only so external callers keep working; the
+    # legacy cache is exactly a SeqState plus a shared scalar "index".
+
+    def prefill(self, params, batch):
+        """DEPRECATED: one fresh whole-prompt chunk through forward()."""
+        tokens, positions, embeds = self.prompt_inputs(params, batch)
+        b, s = positions.shape
+        state = self.init_seq_state(params, s, batch=batch, batch_size=b)
+        state, logits = self.forward(params, state, tokens, positions,
+                                     embeds=embeds, fresh=True)
+        return dict(state, index=jnp.asarray(s, jnp.int32)), logits
+
+    def decode_step(self, params, cache, tokens):
+        """DEPRECATED: a T=1 chunk at the shared scalar index."""
+        cache = dict(cache)
+        index = cache.pop("index")
+        pos = jnp.broadcast_to(index, (tokens.shape[0], 1)).astype(jnp.int32)
+        state, logits = self.forward(params, cache, tokens[:, None], pos)
+        return dict(state, index=index + 1), logits
 
     def cache_specs(self, shape: ShapeConfig):
-        raise NotImplementedError
+        """DEPRECATED: seq_state_specs plus the legacy scalar index."""
+        return dict(self.seq_state_specs(shape),
+                    index=jax.ShapeDtypeStruct((), "int32"))
+
+    def cache_axes(self, shape: ShapeConfig):
+        """DEPRECATED: seq_state_axes plus the legacy scalar index."""
+        return dict(self.seq_state_axes(shape), index=())
 
 
 # =========================== decoder-only ==================================
@@ -127,7 +251,7 @@ class DecoderLM(BaseLM):
         defs["layers"] = stack_defs(self._layer_defs(), self.cfg.n_layers)
         return defs
 
-    # ---- forward over stacked layers ----
+    # ---- forward over stacked layers (training) ----
 
     def _moe_layer(self, lp, x, aux):
         cfg = self.cfg
@@ -173,120 +297,132 @@ class DecoderLM(BaseLM):
         ce = self._ce(params, x, batch["labels"], batch.get("mask"))
         return ce + aux, {"ce": ce, "aux_loss": aux}
 
-    # ---- prefill / decode ----
+    # ---- chunk-oriented serving ----
 
-    def prefill(self, params, batch):
+    def prompt_inputs(self, params, batch):
+        if not self.is_vlm:
+            return super().prompt_inputs(params, batch)
+        x = self._inputs(params, batch)     # (b, npatch + s, d)
+        b, t = x.shape[:2]
+        return None, arange_positions(b, t), x
+
+    def prompt_length(self, batch) -> int:
+        npatch = self.cfg.n_frontend_tokens if self.is_vlm else 0
+        return batch["tokens"].shape[1] + npatch
+
+    def init_seq_state(self, params, max_len, *, batch=None,
+                       batch_size=None, dtype="bfloat16"):
         cfg = self.cfg
-        x = self._inputs(params, batch)
+        b = batch_size if batch_size is not None else len(batch["tokens"])
+        kv, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+        return {"k": jnp.zeros((L, b, max_len, kv, hd), dtype),
+                "v": jnp.zeros((L, b, max_len, kv, hd), dtype)}
 
-        if self.is_moe:
-            def body(carry, lp):
-                x, aux = carry
-                h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
-                q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h)
-                o = attn.attention_core(cfg, q, k, v, causal=True)
-                x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
-                h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
-                y, a = moe_mod.apply_moe(cfg, _sub(lp, "moe_"), h,
-                                         group_size=self.moe_group)
-                return (x + y, aux + a), (k, v)
-            (x, _), (ks, vs) = jax.lax.scan(
-                body, (x, jnp.zeros((), jnp.float32)), params["layers"])
-        else:
-            def body(x, lp):
-                x, k, v = prefill_layer(cfg, lp, x)
-                return x, (k, v)
-            x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
-
-        logits = self._logits(params, x[:, -1:])[:, 0]
-        cache = {"k": ks.astype("bfloat16"), "v": vs.astype("bfloat16"),
-                 "index": jnp.asarray(x.shape[1], jnp.int32)}
-        return cache, logits
-
-    def decode_step(self, params, cache, tokens):
+    def forward(self, params, state, tokens, positions, *, embeds=None,
+                fresh=False):
+        if "block_tables" in state:
+            return self._forward_paged(params, state, tokens, positions)
         cfg = self.cfg
-        x = self._embed(params, tokens)[:, None, :]
-        index = cache["index"]
+        x = embeds if embeds is not None else self._embed(params, tokens)
+        x = shard_act(x, "batch", "seq", "embed")
 
         if self.is_moe:
             def body(carry, inp):
                 x, aux = carry
                 lp, ck, cv = inp
                 h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
-                pos = jnp.full((x.shape[0], 1), index, jnp.int32)
                 q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h,
-                                           positions=pos)
-                ck, cv = attn.cache_update(ck, cv, k, v, index)
-                o = attn.decode_attention(cfg, q, ck, cv, index)
+                                           positions=positions)
+                ck, cv = attn.chunk_cache_update(ck, cv, k, v, positions)
+                if fresh:
+                    o = attn.attention_core(cfg, q, k, v, causal=True)
+                else:
+                    o = attn.chunk_attention(cfg, q, ck, cv, positions)
                 x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
                 h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
                 y, a = moe_mod.apply_moe(cfg, _sub(lp, "moe_"), h,
-                                         group_size=self.moe_group)
+                                         group_size=self.moe_group,
+                                         dropless=True)
                 return (x + y, aux + a), (ck, cv)
             (x, _), (ck, cv) = jax.lax.scan(
                 body, (x, jnp.zeros((), jnp.float32)),
-                (params["layers"], cache["k"], cache["v"]))
+                (params["layers"], state["k"], state["v"]))
         else:
             def body(x, inp):
                 lp, ck, cv = inp
-                x, ck, cv = decode_layer(cfg, lp, x, ck, cv, index)
+                x, ck, cv = chunk_layer(cfg, lp, x, ck, cv, positions,
+                                        fresh=fresh)
                 return x, (ck, cv)
             x, (ck, cv) = jax.lax.scan(
-                body, x, (params["layers"], cache["k"], cache["v"]))
+                body, x, (params["layers"], state["k"], state["v"]))
 
-        logits = self._logits(params, x)[:, 0]
-        return {"k": ck, "v": cv, "index": index + 1}, logits
+        logits = self._gather_logits(params, x, positions)
+        return {**state, "k": ck, "v": cv}, logits
+
+    def _forward_paged(self, params, state, tokens, positions):
+        """Chunk forward against the block-paged pool.  One token per
+        slot per inner step (the flash-decode kernel's shape); T > 1
+        chunks run the steps back to back."""
+        cfg = self.cfg
+        tables = state["block_tables"]
+        kp, vp = state["k"], state["v"]
+
+        def step_token(x, pos):
+            nonlocal kp, vp
+            slots = attn.paged_slot_index(tables, pos, kp.shape[2])
+            if self.is_moe:
+                def body(carry, inp):
+                    x, aux = carry
+                    lp, kp, vp = inp
+                    h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
+                    q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h,
+                                               positions=pos[:, None])
+                    kp, vp = attn.paged_cache_update(kp, vp, k, v, slots)
+                    o = attn.paged_decode_attention(cfg, q, kp, vp,
+                                                    tables, pos + 1)
+                    x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
+                    h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
+                    y, a = moe_mod.apply_moe(cfg, _sub(lp, "moe_"), h,
+                                             group_size=self.moe_group,
+                                             dropless=True)
+                    return (x + y, aux + a), (kp, vp)
+                (x, _), (kp, vp) = jax.lax.scan(
+                    body, (x, jnp.zeros((), jnp.float32)),
+                    (params["layers"], kp, vp))
+            else:
+                def body(x, inp):
+                    lp, kp, vp = inp
+                    x, kp, vp = paged_decode_layer(cfg, lp, x, kp, vp,
+                                                   tables, pos, slots)
+                    return x, (kp, vp)
+                x, (kp, vp) = jax.lax.scan(body, x,
+                                           (params["layers"], kp, vp))
+            return x
+
+        logits, lengths = self._paged_chunk_driver(params, state, tokens,
+                                                   positions, step_token)
+        return {**state, "k": kp, "v": vp, "lengths": lengths}, logits
 
     def paged_decode_step(self, params, pools, block_tables, lengths,
                           tokens):
-        """Continuous-batching decode step against a block-paged KV pool.
-
-        pools: {"k"/"v": (L, n_blocks, bs, kv, hd)}; block_tables
-        (b, nbmax) int32; lengths (b,) int32; tokens (b,) int32 —
-        ``tokens[i]`` is written at logical position ``lengths[i]`` of
-        sequence ``i``.  Unlike ``decode_step`` there is no shared
-        scalar ``index``: every slot advances at its own length, which
-        is what lets new requests join a running batch.  Returns
-        (pools', logits (b, V)).
-        """
-        cfg = self.cfg
-        x = self._embed(params, tokens)[:, None, :]
-        bs = pools["k"].shape[2]
-        blk = jnp.take_along_axis(block_tables, (lengths // bs)[:, None],
-                                  axis=1)[:, 0]
-        slots = blk * bs + lengths % bs
-
-        if self.is_moe:
-            def body(carry, inp):
-                x, aux = carry
-                lp, kp, vp = inp
-                h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
-                q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h,
-                                           positions=lengths[:, None])
-                kp, vp = attn.paged_cache_update(kp, vp, k, v, slots)
-                o = attn.paged_decode_attention(cfg, q, kp, vp,
-                                                block_tables, lengths + 1)
-                x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
-                h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
-                y, a = moe_mod.apply_moe(cfg, _sub(lp, "moe_"), h,
-                                         group_size=self.moe_group)
-                return (x + y, aux + a), (kp, vp)
-            (x, _), (kp, vp) = jax.lax.scan(
-                body, (x, jnp.zeros((), jnp.float32)),
-                (params["layers"], pools["k"], pools["v"]))
-        else:
-            def body(x, inp):
-                lp, kp, vp = inp
-                x, kp, vp = paged_decode_layer(cfg, lp, x, kp, vp,
-                                               block_tables, lengths, slots)
-                return x, (kp, vp)
-            x, (kp, vp) = jax.lax.scan(
-                body, x, (params["layers"], pools["k"], pools["v"]))
-
-        logits = self._logits(params, x)[:, 0]
-        return {"k": kp, "v": vp}, logits
+        """DEPRECATED: a T=1 paged chunk; lengths are the positions."""
+        state = dict(pools, block_tables=block_tables, lengths=lengths)
+        state, logits = self.forward(params, state, tokens[:, None],
+                                     lengths[:, None])
+        return {"k": state["k"], "v": state["v"]}, logits
 
     # ---- specs ----
+
+    @property
+    def prefill_padding_ok(self) -> bool:
+        return True
+
+    @property
+    def paged_kv_layers(self) -> int:
+        return self.cfg.n_layers
+
+    def paged_state_extras(self, n_slots: int) -> dict:
+        return {}
 
     def batch_specs(self, shape: ShapeConfig):
         b, s = shape.global_batch, shape.seq_len
@@ -305,27 +441,30 @@ class DecoderLM(BaseLM):
                 "patches": jax.ShapeDtypeStruct((b, npatch, self.cfg.d_model), cd),
                 "tokens": jax.ShapeDtypeStruct((b, s - npatch), "int32"),
             }
-        return {"tokens": jax.ShapeDtypeStruct((b,), "int32")}
+        return super().batch_specs(shape)
 
-    def cache_specs(self, shape: ShapeConfig):
+    def seq_state_specs(self, shape: ShapeConfig):
         cfg = self.cfg
         b, s = shape.global_batch, shape.seq_len
         kv, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
         return {
             "k": jax.ShapeDtypeStruct((L, b, s, kv, hd), "bfloat16"),
             "v": jax.ShapeDtypeStruct((L, b, s, kv, hd), "bfloat16"),
-            "index": jax.ShapeDtypeStruct((), "int32"),
         }
 
-    def cache_axes(self, shape: ShapeConfig):
+    def seq_state_axes(self, shape: ShapeConfig):
         kvax = ("_", "batch", "kv_seq", "_", "_")
-        return {"k": kvax, "v": kvax, "index": ()}
+        return {"k": kvax, "v": kvax}
 
 
 # ========================= whisper (enc-dec) ================================
 
 
 class WhisperLM(BaseLM):
+    @property
+    def prefill_padding_ok(self) -> bool:
+        return True     # decoder mixes only via position-masked attention
+
     def param_defs(self):
         cfg = self.cfg
         defs = _embed_defs(cfg)
@@ -371,72 +510,55 @@ class WhisperLM(BaseLM):
         x, _ = jax.lax.scan(f, x, (params["decoder"], xks, xvs))
         return x
 
-    def _dec_inputs(self, params, tokens, offset=0):
-        cfg = self.cfg
+    def _dec_inputs(self, params, tokens, positions):
+        """Token embeddings + sinusoidal PE at per-slot positions."""
         x = self._embed(params, tokens)
-        pos = sinusoidal_positions(offset + tokens.shape[1], cfg.d_model)
-        x = x + pos[offset:].astype(x.dtype)
+        pe = sinusoidal_pe(positions, self.cfg.d_model)           # (b,T,d)
+        x = x + pe.astype(x.dtype)
         return shard_act(x, "batch", "seq", "embed")
 
     def loss(self, params, batch):
         enc = self._encode(params, batch["frames"])
         xks, xvs = self._cross_kv(params, enc)
-        x = self._dec_inputs(params, batch["tokens"])
+        b, s = batch["tokens"].shape
+        x = self._dec_inputs(params, batch["tokens"],
+                             arange_positions(b, s))
         x = self._decode_stack(params, x, xks, xvs)
         ce = self._ce(params, x, batch["labels"], batch.get("mask"))
         return ce, {"ce": ce}
 
-    def prefill(self, params, batch):
+    # ---- chunk-oriented serving ----
+
+    def init_seq_state(self, params, max_len, *, batch=None,
+                       batch_size=None, dtype="bfloat16"):
         cfg = self.cfg
+        assert batch is not None and "frames" in batch, \
+            "Whisper SeqState init needs batch['frames'] for the encoder"
         enc = self._encode(params, batch["frames"], remat=False)
         xks, xvs = self._cross_kv(params, enc)
-        x = self._dec_inputs(params, batch["tokens"])
+        b = enc.shape[0]
+        kv, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+        return {"k": jnp.zeros((L, b, max_len, kv, hd), dtype),
+                "v": jnp.zeros((L, b, max_len, kv, hd), dtype),
+                "xk": xks.astype(dtype), "xv": xvs.astype(dtype)}
 
-        def body(x, inp):
-            lp, xk, xv = inp
-            h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
-            q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h)
-            o = attn.attention_core(cfg, q, k, v, causal=True)
-            x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
-            h = apply_norm(cfg, _sub(lp, "lnx_"), x, name="norm")
-            qx = jnp.einsum("bsd,dhk->bshk", h, lp["xattn_wq"].astype(h.dtype))
-            o = attn.attention_core(cfg, qx, xk, xv, causal=False)
-            x = x + attn.out_proj(cfg, _sub(lp, "xattn_"), o)
-            h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
-            from repro.models.transformer import apply_mlp
-            x = x + apply_mlp(cfg, lp, h, prefix="mlp_")
-            return x, (k, v)
-
-        x, (ks, vs) = jax.lax.scan(body, x, (params["decoder"], xks, xvs))
-        logits = self._logits(params, x[:, -1:])[:, 0]
-        cache = {"k": ks.astype("bfloat16"), "v": vs.astype("bfloat16"),
-                 "xk": xks.astype("bfloat16"), "xv": xvs.astype("bfloat16"),
-                 "index": jnp.asarray(x.shape[1], jnp.int32)}
-        return cache, logits
-
-    def decode_step(self, params, cache, tokens):
+    def forward(self, params, state, tokens, positions, *, embeds=None,
+                fresh=False):
         cfg = self.cfg
-        index = cache["index"]
-        x = self._embed(params, tokens)[:, None, :]
-        # sinusoidal position at `index`, computed directly (no table)
-        dim = jnp.arange(cfg.d_model // 2, dtype=jnp.float32)
-        inv = jnp.exp(-jnp.log(10_000.0) * dim / (cfg.d_model // 2))
-        ang = index.astype(jnp.float32) * inv
-        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
-        x = x + pe.astype(x.dtype)
+        x = embeds if embeds is not None else self._dec_inputs(
+            params, tokens, positions)
 
         def body(x, inp):
             lp, ck, cv, xk, xv = inp
-            x, ck, cv = decode_layer(cfg, lp, x, ck, cv, index,
-                                     cross_kv=(xk, xv))
+            x, ck, cv = chunk_layer(cfg, lp, x, ck, cv, positions,
+                                    fresh=fresh, cross_kv=(xk, xv))
             return x, (ck, cv)
 
         x, (ck, cv) = jax.lax.scan(
-            body, x, (params["decoder"], cache["k"], cache["v"],
-                      cache["xk"], cache["xv"]))
-        logits = self._logits(params, x)[:, 0]
-        new = dict(cache, k=ck, v=cv, index=index + 1)
-        return new, logits
+            body, x, (params["decoder"], state["k"], state["v"],
+                      state["xk"], state["xv"]))
+        logits = self._gather_logits(params, x, positions)
+        return {**state, "k": ck, "v": cv}, logits
 
     def batch_specs(self, shape: ShapeConfig):
         cfg = self.cfg
@@ -449,9 +571,9 @@ class WhisperLM(BaseLM):
         if shape.kind == "prefill":
             return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), cd),
                     "tokens": jax.ShapeDtypeStruct((b, s), "int32")}
-        return {"tokens": jax.ShapeDtypeStruct((b,), "int32")}
+        return super().batch_specs(shape)
 
-    def cache_specs(self, shape: ShapeConfig):
+    def seq_state_specs(self, shape: ShapeConfig):
         cfg = self.cfg
         b, s = shape.global_batch, shape.seq_len
         kv, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
@@ -461,13 +583,12 @@ class WhisperLM(BaseLM):
             "v": jax.ShapeDtypeStruct((L, b, s, kv, hd), "bfloat16"),
             "xk": jax.ShapeDtypeStruct((L, b, se, kv, hd), "bfloat16"),
             "xv": jax.ShapeDtypeStruct((L, b, se, kv, hd), "bfloat16"),
-            "index": jax.ShapeDtypeStruct((), "int32"),
         }
 
-    def cache_axes(self, shape: ShapeConfig):
+    def seq_state_axes(self, shape: ShapeConfig):
         kvax = ("_", "batch", "kv_seq", "_", "_")
         xax = ("_", "batch", "_", "_", "_")
-        return {"k": kvax, "v": kvax, "xk": xax, "xv": xax, "index": ()}
+        return {"k": kvax, "v": kvax, "xk": xax, "xv": xax}
 
 
 # ============================ zamba hybrid ==================================
@@ -486,31 +607,68 @@ class ZambaLM(BaseLM):
         ce = self._ce(params, x, batch["labels"], batch.get("mask"))
         return ce, {"ce": ce}
 
-    def prefill(self, params, batch):
-        x = self._embed(params, batch["tokens"])
-        x, mamba_states, attn_kv = zamba_mod.zamba_prefill(self.cfg, params, x)
-        logits = self._logits(params, x[:, -1:])[:, 0]
-        ks = jnp.stack([k for k, _ in attn_kv]).astype("bfloat16")
-        vs = jnp.stack([v for _, v in attn_kv]).astype("bfloat16")
-        cache = {"mamba": mamba_states, "k": ks, "v": vs,
-                 "index": jnp.asarray(x.shape[1], jnp.int32)}
-        return cache, logits
+    # ---- chunk-oriented serving ----
 
-    def decode_step(self, params, cache, tokens):
-        x = self._embed(params, tokens)[:, None, :]
-        x, new_state = zamba_mod.zamba_decode(self.cfg, params, x, cache)
-        logits = self._logits(params, x)[:, 0]
-        return new_state, logits
+    def init_seq_state(self, params, max_len, *, batch=None,
+                       batch_size=None, dtype="bfloat16"):
+        cfg = self.cfg
+        b = batch_size if batch_size is not None else len(batch["tokens"])
+        inv = zamba_mod.n_attn_invocations(cfg)
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        return {
+            "mamba": zamba_mod.zamba_mamba_init(cfg, b, self.compute_dtype),
+            "k": jnp.zeros((inv, b, max_len, kv, hd), dtype),
+            "v": jnp.zeros((inv, b, max_len, kv, hd), dtype),
+        }
 
-    def cache_specs(self, shape: ShapeConfig):
+    def forward(self, params, state, tokens, positions, *, embeds=None,
+                fresh=False):
+        if "block_tables" in state:
+            return self._forward_paged(params, state, tokens, positions)
+        cfg = self.cfg
+        x = embeds if embeds is not None else self._embed(params, tokens)
+        x, mamba_states, ks, vs = zamba_mod.zamba_chunk(
+            cfg, params, x, positions, state, fresh=fresh)
+        logits = self._gather_logits(params, x, positions)
+        return {**state, "mamba": mamba_states,
+                "k": jnp.stack(ks).astype(state["k"].dtype),
+                "v": jnp.stack(vs).astype(state["v"].dtype)}, logits
+
+    def _forward_paged(self, params, state, tokens, positions):
+        cfg = self.cfg
+        tables = state["block_tables"]
+        kp, vp, mamba = state["k"], state["v"], state["mamba"]
+
+        def step_token(x, pos):
+            nonlocal kp, vp, mamba
+            x, mamba, kp, vp = zamba_mod.zamba_paged_step(
+                cfg, params, x, mamba, kp, vp, tables, pos)
+            return x
+
+        logits, lengths = self._paged_chunk_driver(params, state, tokens,
+                                                   positions, step_token)
+        return {**state, "mamba": mamba, "k": kp, "v": vp,
+                "lengths": lengths}, logits
+
+    @property
+    def paged_kv_layers(self) -> int:
+        return zamba_mod.n_attn_invocations(self.cfg)
+
+    def paged_state_extras(self, n_slots: int) -> dict:
+        """Per-slot mamba state pools riding beside the paged KV blocks —
+        what lets the hybrid family join the paged path."""
+        return {"mamba": zamba_mod.zamba_mamba_init(self.cfg, n_slots,
+                                                    self.compute_dtype)}
+
+    def seq_state_specs(self, shape: ShapeConfig):
         return zamba_mod.zamba_state_specs(self.cfg, shape.global_batch,
                                            shape.seq_len)
 
-    def cache_axes(self, shape: ShapeConfig):
+    def seq_state_axes(self, shape: ShapeConfig):
         mst = {"ssm": ("batch", "_", "_", "_"), "conv": ("batch", "_", "_")}
         kvax = ("_", "batch", "kv_seq", "_", "_")
         return {"mamba": [mst for _ in range(self.cfg.n_layers)],
-                "k": kvax, "v": kvax, "index": ()}
+                "k": kvax, "v": kvax}
 
 
 # ============================== xLSTM =======================================
@@ -543,51 +701,52 @@ class XLSTMLM(BaseLM):
         ce = self._ce(params, x, batch["labels"], batch.get("mask"))
         return ce, {"ce": ce}
 
-    def prefill(self, params, batch):
-        cfg = self.cfg
-        x = self._embed(params, batch["tokens"])
-        states = []
-        for i, kind in enumerate(cfg.block_pattern):
-            blk = params[f"block_{i}"]
-            if kind == "m":
-                x, st = xlstm_mod.mlstm_block_prefill(cfg, blk, x)
-            else:
-                x, st = xlstm_mod.slstm_block_prefill(cfg, blk, x)
-            states.append(st)
-        logits = self._logits(params, x[:, -1:])[:, 0]
-        return {"blocks": states,
-                "index": jnp.asarray(x.shape[1], jnp.int32)}, logits
+    # ---- chunk-oriented serving ----
 
-    def decode_step(self, params, cache, tokens):
+    def init_seq_state(self, params, max_len, *, batch=None,
+                       batch_size=None, dtype="bfloat16"):
+        b = batch_size if batch_size is not None else len(batch["tokens"])
+        return {"blocks": xlstm_mod.xlstm_init_states(self.cfg, b,
+                                                      self.compute_dtype)}
+
+    def forward(self, params, state, tokens, positions, *, embeds=None,
+                fresh=False):
         cfg = self.cfg
-        x = self._embed(params, tokens)[:, None, :]
+        x = embeds if embeds is not None else self._embed(params, tokens)
+        T = x.shape[1]
         new_states = []
         for i, kind in enumerate(cfg.block_pattern):
             blk = params[f"block_{i}"]
-            st = cache["blocks"][i]
+            st = None if fresh else state["blocks"][i]
             if kind == "m":
-                x, st = xlstm_mod.mlstm_block_decode(cfg, blk, x, st)
+                if T == 1 and not fresh:
+                    x, st = xlstm_mod.mlstm_block_decode(cfg, blk, x, st)
+                else:
+                    x, st = xlstm_mod.mlstm_block_prefill(cfg, blk, x,
+                                                          state=st)
             else:
-                x, st = xlstm_mod.slstm_block_decode(cfg, blk, x, st)
+                if T == 1 and not fresh:
+                    x, st = xlstm_mod.slstm_block_decode(cfg, blk, x, st)
+                else:
+                    x, st = xlstm_mod.slstm_block_prefill(cfg, blk, x,
+                                                          state=st)
             new_states.append(st)
-        logits = self._logits(params, x)[:, 0]
-        return {"blocks": new_states, "index": cache["index"] + 1}, logits
+        logits = self._gather_logits(params, x, positions)
+        return {**state, "blocks": new_states}, logits
 
-    def cache_specs(self, shape: ShapeConfig):
+    def seq_state_specs(self, shape: ShapeConfig):
         return {
             "blocks": xlstm_mod.xlstm_state_specs(self.cfg,
                                                   shape.global_batch),
-            "index": jax.ShapeDtypeStruct((), "int32"),
         }
 
-    def cache_axes(self, shape: ShapeConfig):
+    def seq_state_axes(self, shape: ShapeConfig):
         mst = {"C": ("batch", "_", "_", "_"), "n": ("batch", "_", "_"),
                "m": ("batch", "_"), "conv": ("batch", "_", "_")}
         sst = {"c": ("batch", "_", "_"), "n": ("batch", "_", "_"),
                "m": ("batch", "_", "_"), "h": ("batch", "_", "_")}
         return {"blocks": [mst if k == "m" else sst
-                           for k in self.cfg.block_pattern],
-                "index": ()}
+                           for k in self.cfg.block_pattern]}
 
 
 # ============================== factory =====================================

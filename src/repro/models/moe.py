@@ -66,15 +66,31 @@ def _shard_ge(x, g_axis_name, n_experts):
     return shard_act(x, *axes)
 
 
-def apply_moe(cfg, params, x, *, group_size=DEFAULT_GROUP):
-    """x (b, s, d) -> (y (b, s, d), aux_loss)."""
+def apply_moe(cfg, params, x, *, group_size=DEFAULT_GROUP, dropless=False):
+    """x (b, s, d) -> (y (b, s, d), aux_loss).
+
+    ``dropless=True`` removes the capacity constraint (cap = every
+    (token, choice) fits): each token's output then depends only on its
+    own routing, never on which other tokens share its dispatch group —
+    the invariance the chunk-oriented serving path needs so that a
+    prompt prefilled in chunks (or padded to a bucket) routes exactly
+    like a monolithic prefill.  Training keeps the capacity-limited
+    GShard form (the paper's EP cost model assumes it); dropless pays a
+    larger dispatch tensor, acceptable at serving batch sizes.
+    """
     m = cfg.moe
     b, s, d = x.shape
     T = b * s
     g = min(group_size, T)
     G = T // g
-    cap = max(int(g * m.top_k / m.n_experts * m.capacity_factor), m.top_k)
-    cap = min(cap, g)
+    if dropless:
+        # a token holds at most one slot per expert queue (top_k expert
+        # indices are distinct), so g capacity slots fit every entry
+        cap = g
+    else:
+        cap = max(int(g * m.top_k / m.n_experts * m.capacity_factor),
+                  m.top_k)
+        cap = min(cap, g)
     xf = x.reshape(G, g, d)
     # G inherits the batch sharding when it spans >= the batch dim; for
     # decode (G == 1) the token dim S carries it instead.

@@ -5,16 +5,33 @@ import jax
 import jax.numpy as jnp
 
 
-def causal_conv1d(x, w, b=None):
-    """Depthwise causal conv. x (b, l, c), w (c, width) -> (b, l, c)."""
+def causal_conv1d(x, w, b=None, state=None):
+    """Depthwise causal conv. x (b, l, c), w (c, width) -> (b, l, c).
+
+    ``state`` (b, width-1, c): the previous chunk's trailing raw inputs,
+    used in place of the zero left-pad so a chunked stream is bitwise
+    identical to one monolithic pass (a zero state *is* the zero pad)."""
     width = w.shape[-1]
-    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
     # gather shifted views: y[t] = sum_k x[t - width + 1 + k] * w[:, k]
     segs = [xp[:, k:k + x.shape[1], :] * w[:, k] for k in range(width)]
     y = sum(segs)
     if b is not None:
         y = y + b
     return y
+
+
+def conv_chunk_state(state, x_raw, width: int):
+    """Next conv state after a chunk: last width-1 raw inputs of
+    [state; x_raw] (state=None means a fresh zero window)."""
+    if state is None:
+        b, _, c = x_raw.shape
+        state = jnp.zeros((b, width - 1, c), x_raw.dtype)
+    full = jnp.concatenate([state.astype(x_raw.dtype), x_raw], axis=1)
+    return full[:, -(width - 1):, :]
 
 
 def conv_state_update(state, x_new, w, b=None):

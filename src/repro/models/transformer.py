@@ -86,25 +86,6 @@ def dense_layer(cfg, lp, x, *, causal=True, positions=None,
     return shard_act(x, "batch", "seq", "embed")
 
 
-def decode_layer(cfg, lp, x, ck, cv, index, *, cross_kv=None):
-    """One-token decode. x (b, 1, d); ck/cv (b, S, kv, hd)."""
-    h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
-    pos = jnp.full((x.shape[0], 1), index, jnp.int32)
-    q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h, positions=pos)
-    ck, cv = attn.cache_update(ck, cv, k, v, index)
-    o = attn.decode_attention(cfg, q, ck, cv, index)
-    x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
-    if cross_kv is not None:
-        xk, xv = cross_kv
-        h = apply_norm(cfg, _sub(lp, "lnx_"), x, name="norm")
-        q = jnp.einsum("bsd,dhk->bshk", h, lp["xattn_wq"].astype(h.dtype))
-        o = attn.attention_core(cfg, q, xk, xv, causal=False)
-        x = x + attn.out_proj(cfg, _sub(lp, "xattn_"), o)
-    h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
-    x = x + apply_mlp(cfg, lp, h, prefix="mlp_")
-    return x, ck, cv
-
-
 def paged_decode_layer(cfg, lp, x, k_pool, v_pool, block_tables, lengths,
                        slots):
     """One-token decode against a block-paged KV pool.
@@ -126,15 +107,39 @@ def paged_decode_layer(cfg, lp, x, k_pool, v_pool, block_tables, lengths,
     return x, k_pool, v_pool
 
 
-def prefill_layer(cfg, lp, x, *, positions=None):
-    """Forward + return this layer's full K/V for the cache."""
+def chunk_layer(cfg, lp, x, ck, cv, positions, *, fresh=False,
+                cross_kv=None):
+    """One layer of the chunk-oriented forward: prefill = decode = a chunk.
+
+    x (b, T, d) for any T >= 1; ck/cv (b, S, kv, hd) dense cache;
+    positions (b, T) absolute per-slot positions (negative = padding).
+    The chunk's K/V are scattered into the cache first, then every query
+    attends cache positions ``<=`` its own position — T = prompt length
+    is a monolithic prefill, T = 1 is a decode step, anything between is
+    a prefill chunk.
+
+    ``fresh=True`` is the caller's *static* promise that the cache is
+    factory-fresh and valid positions are lockstep ``arange`` rows; the
+    layer then runs the fused causal core (flash-attention kernel on
+    TPU) over the chunk itself instead of the masked cache gather.
+    """
     h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
     q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h, positions=positions)
-    o = attn.attention_core(cfg, q, k, v, causal=True)
+    ck, cv = attn.chunk_cache_update(ck, cv, k, v, positions)
+    if fresh:
+        o = attn.attention_core(cfg, q, k, v, causal=True)
+    else:
+        o = attn.chunk_attention(cfg, q, ck, cv, positions)
     x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
+    if cross_kv is not None:
+        xk, xv = cross_kv
+        h = apply_norm(cfg, _sub(lp, "lnx_"), x, name="norm")
+        qx = jnp.einsum("bsd,dhk->bshk", h, lp["xattn_wq"].astype(h.dtype))
+        o = attn.attention_core(cfg, qx, xk, xv, causal=False)
+        x = x + attn.out_proj(cfg, _sub(lp, "xattn_"), o)
     h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
     x = x + apply_mlp(cfg, lp, h, prefix="mlp_")
-    return x, k, v
+    return x, ck, cv
 
 
 # -------------------------- stacked-layer helpers ---------------------------

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 
 from repro.models.common import apply_norm
 from repro.models.params import p
-from repro.models.ssm_common import causal_conv1d, conv_state_update
+from repro.models.ssm_common import (causal_conv1d, conv_chunk_state,
+                                     conv_state_update)
 from repro.parallel.axes import shard_act
 
 NEG_INF = -1e30
@@ -231,14 +232,37 @@ def apply_mlstm_block(cfg, params, x):
     return _mlstm_out(cfg, params, hcell, z, x)
 
 
-def mlstm_block_prefill(cfg, params, x):
+def mlstm_block_prefill(cfg, params, x, state=None):
+    """Chunk-capable prefill: ``state`` continues a previous chunk (the
+    cell recurrence resumes from (C, n, m) and the causal conv window is
+    seeded with the previous chunk's raw tail)."""
     xu, z = _mlstm_qkvgates(cfg, params, x)
-    conv_state = xu[:, -(cfg.ssm.conv_width - 1):, :]
+    conv_in = None if state is None else state["conv"]
+    conv_state = conv_chunk_state(conv_in, xu, cfg.ssm.conv_width)
     conv = lambda xc: jax.nn.silu(causal_conv1d(
         xc, params["conv_w"].astype(xc.dtype),
-        params["conv_b"].astype(xc.dtype)))
+        params["conv_b"].astype(xc.dtype), state=conv_in))
     q, k, v, ig, lf = _mlstm_inner(cfg, params, xu, conv)
-    hcell, (C, n, m) = mlstm_chunked(q, k, v, ig, lf, cfg.ssm.chunk_size)
+    cell = None if state is None else (state["C"], state["n"], state["m"])
+    l = x.shape[1]
+    c = min(cfg.ssm.chunk_size, l)
+    head = (l // c) * c
+    if head == l:
+        hcell, (C, n, m) = mlstm_chunked(q, k, v, ig, lf,
+                                         cfg.ssm.chunk_size, state=cell)
+    else:
+        # ragged tail (l not a chunk multiple): scan the divisible head,
+        # then one short chunk carrying the cell state
+        sl = lambda a, lo, hi: a[:, lo:hi]
+        h1, cell = mlstm_chunked(sl(q, 0, head), sl(k, 0, head),
+                                 sl(v, 0, head), sl(ig, 0, head),
+                                 sl(lf, 0, head), cfg.ssm.chunk_size,
+                                 state=cell)
+        h2, (C, n, m) = mlstm_chunked(sl(q, head, l), sl(k, head, l),
+                                      sl(v, head, l), sl(ig, head, l),
+                                      sl(lf, head, l), cfg.ssm.chunk_size,
+                                      state=cell)
+        hcell = jnp.concatenate([h1, h2], axis=1)
     out = _mlstm_out(cfg, params, hcell, z, x)
     return out, {"C": C, "n": n, "m": m, "conv": conv_state}
 
@@ -313,9 +337,13 @@ def apply_slstm_block(cfg, params, x):
     return _slstm_post(cfg, params, hcell, x)
 
 
-def slstm_block_prefill(cfg, params, x):
+def slstm_block_prefill(cfg, params, x, state=None):
+    """Chunk-capable prefill: the per-token scan resumes from ``state``
+    (so any chunking of the prompt is bitwise one monolithic scan)."""
     zx, ix, fx, ox = _slstm_pre(cfg, params, x)
-    hcell, (c, n, m, hp) = slstm_scan(zx, ix, fx, ox, params["R"])
+    st = None if state is None else (state["c"], state["n"], state["m"],
+                                     state["h"])
+    hcell, (c, n, m, hp) = slstm_scan(zx, ix, fx, ox, params["R"], state=st)
     return _slstm_post(cfg, params, hcell, x), {"c": c, "n": n, "m": m,
                                                 "h": hp}
 
@@ -326,6 +354,31 @@ def slstm_block_decode(cfg, params, x, state):
     hcell, (c, n, m, hp) = slstm_scan(zx, ix, fx, ox, params["R"], state=st)
     return _slstm_post(cfg, params, hcell, x), {"c": c, "n": n, "m": m,
                                                 "h": hp}
+
+
+def xlstm_init_states(cfg, batch: int, compute_dtype) -> list:
+    """Factory per-block decode states, bitwise identical to the
+    ``state=None`` initializers inside ``mlstm_chunked``/``slstm_scan``
+    (so a chunked prompt resumes exactly like a fresh monolithic one)."""
+    d_in, h, dh = _heads(cfg)
+    d = cfg.d_model
+    hs, dhs = cfg.n_heads, d // cfg.n_heads
+    out = []
+    for kind in cfg.block_pattern:
+        if kind == "m":
+            out.append({
+                "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, h, dh), jnp.float32),
+                "m": jnp.full((batch, h), NEG_INF, jnp.float32),
+                "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, d_in),
+                                  compute_dtype),
+            })
+        else:
+            z0 = jnp.zeros((batch, hs, dhs), jnp.float32)
+            out.append({"c": z0, "n": z0 + 1e-6,
+                        "m": jnp.full((batch, hs, dhs), -10.0, jnp.float32),
+                        "h": z0})
+    return out
 
 
 def xlstm_state_specs(cfg, batch: int, dtype="bfloat16"):

@@ -9,8 +9,8 @@ import jax.numpy as jnp
 from repro.models import attention as attn
 from repro.models import mamba2
 from repro.models.params import p
-from repro.models.transformer import (dense_layer, decode_layer, layer_defs,
-                                      stack_defs)
+from repro.models.transformer import (chunk_layer, dense_layer, layer_defs,
+                                      paged_decode_layer, stack_defs)
 
 
 def segments(cfg) -> list[int]:
@@ -80,59 +80,90 @@ def zamba_forward(cfg, params, x, *, remat=True):
     return x
 
 
-def zamba_prefill(cfg, params, x):
-    """Returns (x, mamba_states(list per layer), attn_kv(list per invocation))."""
-    mamba_states, attn_kv = [], []
-    start = 0
+def _mamba_lp(cfg, params, li):
+    lp = jax.tree_util.tree_map(lambda a: a[li], dict(params["mamba"]))
+    lp["pre_scale"] = params["pre_norm"]["scale"][li]
+    return lp
+
+
+def _pre_norm(x, scale):
+    xf = x.astype(jnp.float32)
+    xn = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True)
+                            + 1e-6)
+    return (xn * scale).astype(x.dtype)
+
+
+def zamba_chunk(cfg, params, x, positions, state, *, fresh=False):
+    """One chunk (T >= 1 tokens) through the hybrid stack.
+
+    ``state`` is the hybrid SeqState ({"mamba": per-layer streaming
+    states, "k"/"v": (I, b, S, kv, hd) dense attention caches}); the
+    mamba recurrences resume from their carried states while the shared
+    attention block scatters into / attends against the dense cache at
+    per-slot ``positions``.  ``fresh=True``: factory state, take the
+    whole-sequence paths.  Returns (x, mamba_states, ks, vs).
+    """
+    T = x.shape[1]
+    mamba_states, ks, vs = [], [], []
+    inv, start = 0, 0
     for si, seg in enumerate(segments(cfg)):
         for li in range(start, start + seg):
-            lp = dict(_slice_tree(params["mamba"], li, li + 1))
-            lp = jax.tree_util.tree_map(lambda a: a[0], lp)
-            lp["pre_scale"] = params["pre_norm"]["scale"][li]
-            xf = x.astype(jnp.float32)
-            xn = xf * jax.lax.rsqrt(
-                jnp.mean(jnp.square(xf), -1, keepdims=True) + 1e-6)
-            xn = (xn * lp["pre_scale"]).astype(x.dtype)
-            out, st = mamba2.mamba2_prefill(cfg, lp, xn)
+            lp = _mamba_lp(cfg, params, li)
+            xn = _pre_norm(x, lp["pre_scale"])
+            st = None if fresh else state["mamba"][li]
+            if T == 1 and not fresh:
+                out, st = mamba2.mamba2_decode(cfg, lp, xn, st)
+            else:
+                out, st = mamba2.mamba2_prefill(cfg, lp, xn, state=st)
             x = x + out
             mamba_states.append(st)
         start += seg
         if si < n_attn_invocations(cfg):
-            from repro.models.transformer import prefill_layer
-            x, k, v = prefill_layer(cfg, params["shared"], x)
-            attn_kv.append((k, v))
-    return x, mamba_states, attn_kv
+            x, ck, cv = chunk_layer(cfg, params["shared"], x,
+                                    state["k"][inv], state["v"][inv],
+                                    positions, fresh=fresh)
+            ks.append(ck)
+            vs.append(cv)
+            inv += 1
+    return x, mamba_states, ks, vs
 
 
-def zamba_decode(cfg, params, x, state):
-    """x (b,1,d); state {"mamba": list, "k": (I,b,S,kv,hd), "v": ..., index}."""
-    index = state["index"]
-    new_mamba, inv = [], 0
-    ks, vs = [], []
-    start = 0
+def zamba_paged_step(cfg, params, x, mamba, kp, vp, block_tables, pos):
+    """One token per slot against paged attention pools + per-slot mamba
+    state.  x (b,1,d); kp/vp (I, n_blocks, bs, kv, hd); pos (b,) is each
+    slot's write position.  Returns (x, mamba', kp', vp')."""
+    slots = attn.paged_slot_index(block_tables, pos, kp.shape[2])
+    new_mamba, inv, start = [], 0, 0
     for si, seg in enumerate(segments(cfg)):
         for li in range(start, start + seg):
-            lp = jax.tree_util.tree_map(lambda a: a[li],
-                                        dict(params["mamba"]))
-            lp["pre_scale"] = params["pre_norm"]["scale"][li]
-            xf = x.astype(jnp.float32)
-            xn = xf * jax.lax.rsqrt(
-                jnp.mean(jnp.square(xf), -1, keepdims=True) + 1e-6)
-            xn = (xn * lp["pre_scale"]).astype(x.dtype)
-            out, st = mamba2.mamba2_decode(cfg, lp, xn, state["mamba"][li])
+            lp = _mamba_lp(cfg, params, li)
+            xn = _pre_norm(x, lp["pre_scale"])
+            out, st = mamba2.mamba2_decode(cfg, lp, xn, mamba[li])
             x = x + out
             new_mamba.append(st)
         start += seg
         if si < n_attn_invocations(cfg):
-            x, ck, cv = decode_layer(cfg, params["shared"], x,
-                                     state["k"][inv], state["v"][inv], index)
-            ks.append(ck)
-            vs.append(cv)
+            x, ki, vi = paged_decode_layer(cfg, params["shared"], x,
+                                           kp[inv], vp[inv], block_tables,
+                                           pos, slots)
+            kp = kp.at[inv].set(ki)
+            vp = vp.at[inv].set(vi)
             inv += 1
-    new_state = {"mamba": new_mamba,
-                 "k": jnp.stack(ks), "v": jnp.stack(vs),
-                 "index": index + 1}
-    return x, new_state
+    return x, new_mamba, kp, vp
+
+
+def zamba_mamba_init(cfg, batch: int, compute_dtype) -> list:
+    """Factory per-layer mamba streaming states (what the SSD scan and
+    conv window start from on a fresh sequence)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.state_size
+    return [{"ssm": jnp.zeros((batch, nheads, s.head_dim, s.state_size),
+                              jnp.float32),
+             "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim),
+                               compute_dtype)}
+            for _ in range(cfg.n_layers)]
 
 
 def zamba_state_specs(cfg, batch: int, max_len: int, dtype="bfloat16"):
@@ -143,5 +174,4 @@ def zamba_state_specs(cfg, batch: int, max_len: int, dtype="bfloat16"):
                   for _ in range(cfg.n_layers)],
         "k": jax.ShapeDtypeStruct((inv, batch, max_len, kv, hd), dtype),
         "v": jax.ShapeDtypeStruct((inv, batch, max_len, kv, hd), dtype),
-        "index": jax.ShapeDtypeStruct((), "int32"),
     }

@@ -65,27 +65,37 @@ def _unpack_tree(raw: bytes, template):
         jax.tree_util.tree_structure(template), out)
 
 
-def grow_cache_geometric(cache, extra: int):
-    """Grow attention caches (the (L, b, S, kv, hd) 5-D leaves)
-    geometrically: double the seq capacity until it covers index+extra.
-    Doubling keeps the number of re-allocations (and distinct
-    decode_step compilations) O(log len) over a long decode, where
-    growing by ``extra`` per call is O(steps) in both.  Slack positions
-    are masked by ``decode_attention``, so outputs are unchanged."""
-    needed = int(jax.device_get(cache["index"])) + extra
-
+def grow_seq_state(state: dict, needed: int):
+    """Grow a SeqState's self-attention KV capacity (the "k"/"v" 5-D
+    leaves, seq dim 2) geometrically to cover ``needed`` positions.
+    Doubling keeps the number of re-allocations (and distinct forward
+    compilations) O(log len) over a long decode.  Slack positions are
+    masked by the per-position chunk attention, so outputs are
+    unchanged.  Cross-KV ("xk"/"xv") and recurrent states are fixed
+    size and left alone."""
     def grow(x):
-        if hasattr(x, "ndim") and x.ndim == 5:
-            cur = x.shape[2]
-            cap = max(cur, 1)
-            while cap < needed:
-                cap *= 2
-            if cap > cur:
-                pad = [(0, 0)] * 5
-                pad[2] = (0, cap - cur)
-                return jnp.pad(x, pad)
+        cur = x.shape[2]
+        cap = max(cur, 1)
+        while cap < needed:
+            cap *= 2
+        if cap > cur:
+            pad = [(0, 0)] * 5
+            pad[2] = (0, cap - cur)
+            return jnp.pad(x, pad)
         return x
-    return jax.tree_util.tree_map(grow, cache)
+    out = dict(state)
+    for key in ("k", "v"):
+        if key in out and getattr(out[key], "ndim", 0) == 5:
+            out[key] = grow(out[key])
+    return out
+
+
+def grow_cache_geometric(cache, extra: int):
+    """DEPRECATED: legacy-cache ({..., "index"}) wrapper over
+    ``grow_seq_state`` for callers still on the prefill/decode_step
+    shims."""
+    needed = int(jax.device_get(cache["index"])) + extra
+    return grow_seq_state(cache, needed)
 
 
 class KVContextCache:
@@ -118,16 +128,18 @@ class BatchServer:
     10x serving-cost claim lives exactly here: prefill is O(L * s * N),
     restore is O(cache bytes)).
 
-    Two decode paths, selected by ``cfg.decode_impl`` (or the
-    ``decode_impl`` override):
+    Both decode paths drive the one chunk-oriented model API
+    (``model.init_seq_state`` + ``model.forward``), selected by
+    ``cfg.decode_impl`` (or the ``decode_impl`` override):
 
-    * ``"dense"`` — the original lockstep batch decode against one
-      contiguous cache; works for every model family.
+    * ``"dense"`` — lockstep batch decode against one contiguous
+      SeqState: the prompt is a single fresh chunk, every decode step a
+      T=1 chunk; works for every model family.
     * ``"paged"`` — routes the batch through
       ``repro.serving.ServingEngine``: block-paged KV, continuous
       batching, flash-decode kernel, and block-reference prefix reuse
-      in place of the dense 3FS round-trip (attention-cache families
-      only)."""
+      in place of the dense 3FS round-trip (attention-KV and hybrid
+      families)."""
 
     def __init__(self, model, params, context_cache: KVContextCache | None,
                  *, gen_slots: int = 32, decode_impl: str | None = None,
@@ -140,15 +152,10 @@ class BatchServer:
             getattr(model, "cfg", None), "decode_impl", "dense")
         self._engine = None
         self._engine_kwargs = engine_kwargs or {}
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
-
-    def _grow(self, cache, extra):
-        return grow_cache_geometric(cache, extra)
-
-    def _prefill_batch(self, batch: dict):
-        cache, logits = self._prefill(self.params, batch)
-        return cache, logits
+        self._init = jax.jit(
+            model.init_seq_state,
+            static_argnames=("max_len", "batch_size", "dtype"))
+        self._forward = jax.jit(model.forward, static_argnames=("fresh",))
 
     def _serve_paged(self, batch: dict, gen: int):
         from repro.serving import ServingEngine
@@ -163,35 +170,47 @@ class BatchServer:
                 **self._engine.stats}
         return np.stack([outs[r] for r in rids]), info
 
+    def _prefill_state(self, batch: dict, gen: int):
+        """One fresh whole-prompt chunk; capacity covers prompt + gen."""
+        tokens, positions, embeds = self.model.prompt_inputs(
+            self.params, batch)
+        b, s = positions.shape
+        state = self._init(self.params, max_len=s + gen, batch=batch,
+                           batch_size=b)
+        state, logits = self._forward(self.params, state, tokens, positions,
+                                      embeds=embeds, fresh=True)
+        return state, logits, s
+
     def serve(self, batch: dict, gen: int = 16):
         """batch: model-format prefill inputs. Returns (tokens (b, gen),
         info)."""
         if self.decode_impl == "paged":
             return self._serve_paged(batch, gen)
         tokens_np = np.asarray(batch["tokens"])
+        b = tokens_np.shape[0]
         restored = None
         if self.ctx is not None:
             # template from one abstract prefill (shape-only)
             template = jax.eval_shape(
-                lambda p, b: self._prefill_fn_template(p, b),
+                lambda p, bt: self._prefill_state(bt, gen)[:2],
                 self.params, batch)
             restored = self.ctx.get(tokens_np, template)
         if restored is None:
-            cache, logits = self._prefill_batch(batch)
+            state, logits, _ = self._prefill_state(batch, gen)
             if self.ctx is not None:
-                self.ctx.put(tokens_np, (cache, logits))
+                self.ctx.put(tokens_np, (state, logits))
         else:
-            cache, logits = restored
+            state, logits = restored
+        start = self.model.prompt_length(batch)
+        state = grow_seq_state(state, start + gen)
 
-        cache = self._grow(cache, gen)
         toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out = [np.asarray(toks)]
-        for _ in range(gen - 1):
-            cache, logits = self._decode(self.params, cache, toks)
+        for i in range(gen - 1):
+            pos = jnp.full((b, 1), start + i, jnp.int32)
+            state, logits = self._forward(self.params, state,
+                                          toks[:, None], pos)
             toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             out.append(np.asarray(toks))
         info = {"hit_rate": self.ctx.hit_rate if self.ctx else 0.0}
         return np.stack(out, axis=1), info
-
-    def _prefill_fn_template(self, params, batch):
-        return self.model.prefill(params, batch)

@@ -6,30 +6,35 @@ step's batch dimension) and a FIFO request queue.  Each engine step:
 1. **admits** queued requests into free slots — prefilling their prompt
    (or restoring it by block reference on a prefix-cache hit) and
    scattering the K/V into freshly allocated blocks;
-2. runs **one fused decode step for every occupied slot at once** via
-   ``model.paged_decode_step``: per-slot lengths and block tables mean
-   a request that joined this step decodes beside one that is 500
-   tokens deep — no lockstep, no re-prefill of the running batch;
-3. **retires** finished requests, returning their blocks to the pool.
+2. runs **one fused chunk (T=1) for every occupied slot at once** via
+   ``model.forward`` on the paged SeqState: per-slot lengths and block
+   tables live *inside* the state, so a request that joined this step
+   decodes beside one that is 500 tokens deep — no lockstep, no
+   re-prefill of the running batch;
+3. **samples** the next token per slot (per-request temperature/top-k
+   with per-slot PRNG keys threaded through the SeqState; greedy is
+   the deterministic default) and **retires** finished requests,
+   returning their blocks to the pool.
 
-Compilation discipline: the step function's shapes depend only on
-(max_slots, table_width).  Table width is bucketed to powers of two, so
-admitting/retiring requests or growing sequences re-uses one of
-O(log n_blocks) compiled variants instead of recompiling per step —
-the "length-bucketed step functions" the dense path cannot offer
-(its cache is one contiguous array whose length bakes into the jit).
-Idle slots point at the scratch block with length 0; their logits are
-garbage and ignored.
-
-Prompt prefill runs unbucketed (one jit per distinct prompt length):
-bucketing prefill needs position-indexed last-token logits, which the
-model API does not expose — noted in ROADMAP.
+Compilation discipline: the decode step's shapes depend only on
+(max_slots, table_width), with table widths bucketed to powers of two
+— O(log n_blocks) compiled variants.  Prompt prefill is **bucketed**
+too: the dense scratch SeqState's capacity rounds up to a power of
+two, the prompt runs through ``model.forward`` as one padded chunk (or
+``prefill_chunk``-sized chunks, interleaved with decode ticks so
+admission never stalls the running batch), and the position-indexed
+last-token logit gather reads the real last token — so prompts of N
+distinct lengths compile O(log max_prompt) variants instead of N.
+The hybrid family pages its attention blocks while its per-slot mamba
+states ride in the engine's extras pools (padding would corrupt a
+recurrence, so hybrid chunks are exact-length: compile count is
+bounded by the chunk size, not the prompt length).
 
 Eviction: ``evict(rid)`` (or pool exhaustion mid-decode) frees a
-running request's blocks and re-queues it from scratch; greedy decode
-is deterministic, so a re-admitted request reproduces the same tokens
-— and usually re-enters through the prefix cache instead of a full
-prefill.
+running request's blocks and re-queues it from scratch; decode is
+deterministic given (seed, position) — greedy trivially, sampling via
+``fold_in(seed, rid, position)`` keys — so a re-admitted request reproduces
+the same tokens.
 """
 from __future__ import annotations
 
@@ -41,7 +46,14 @@ import numpy as np
 
 from repro.serving.paged_cache import PagedKVCache
 
-_PAGED_FAMILIES = ("dense", "moe")
+_PAGED_FAMILIES = ("dense", "moe", "hybrid")
+
+
+def _pow2_at_least(n: int, floor: int = 1) -> int:
+    w = max(floor, 1)
+    while w < n:
+        w *= 2
+    return w
 
 
 @dataclasses.dataclass
@@ -50,28 +62,57 @@ class Request:
     max_new_tokens: int
     arrival: int = 0                   # earliest admissible engine step
     rid: int = -1
+    # -- sampling (greedy when temperature == 0) --
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+    base_key: np.ndarray | None = None      # fold_in(PRNGKey(seed), rid)
     # -- runtime state (engine-owned) --
     tokens: list = dataclasses.field(default_factory=list)   # generated
     blocks: list = dataclasses.field(default_factory=list)   # block table
     length: int = 0                    # cache occupancy (tokens written)
     slot: int = -1
     admitted_at: int = -1
-    status: str = "queued"             # queued | running | done
+    status: str = "queued"             # queued | prefilling | running | done
 
     @property
     def done(self) -> bool:
         return len(self.tokens) >= self.max_new_tokens
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+class _PrefillJob:
+    """An in-flight chunked prefill: one chunk advances per engine step,
+    interleaved with decode ticks for the running slots.  Pool blocks
+    are reserved up front so a full pool stalls admission *before* any
+    prefill compute is spent."""
+
+    def __init__(self, req, state, chunks, blocks):
+        self.req = req
+        self.state = state
+        self.chunks = chunks           # list of (tokens, positions) np
+        self.blocks = blocks           # pre-allocated pool blocks
+        self.next = 0
+        self.logits = None
+
+    @property
+    def finished(self) -> bool:
+        return self.next >= len(self.chunks)
 
 
 class ServingEngine:
     def __init__(self, model, params, *, n_blocks: int = 256,
                  block_size: int = 16, max_slots: int = 4,
                  pool_dtype: str = "bfloat16", share_prefixes: bool = True,
-                 min_table_width: int = 2):
+                 min_table_width: int = 2, prefill_chunk: int = 0,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
         cfg = model.cfg
         if cfg.family not in _PAGED_FAMILIES:
             raise ValueError(
-                f"paged serving needs a per-layer attention KV cache; "
+                f"paged serving needs per-layer attention KV blocks; "
                 f"family {cfg.family!r} is unsupported (use decode_impl="
                 f"'dense')")
         self.model = model
@@ -83,20 +124,71 @@ class ServingEngine:
         # expected max context to pin the step to one compiled shape
         # (e.g. benchmarking, or latency-critical serving).
         self.min_table_width = min_table_width
+        # Prefill chunking: 0 = one bucketed whole-prompt chunk per
+        # admission; >0 = advance one prefill chunk per engine step,
+        # interleaved with decode ticks.  Families with a carried
+        # recurrence get exact-length chunks (no padding through state).
+        self.prefill_chunk = prefill_chunk
+        self.pad_prefill = model.prefill_padding_ok
+        # Engine-level sampling defaults; submit() overrides per request.
+        self.temperature = temperature
+        self.top_k = top_k
+        self.seed = seed
         self.cache = PagedKVCache(
-            layers=cfg.n_layers, n_blocks=n_blocks, block_size=block_size,
-            kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
-            dtype=pool_dtype)
-        self._prefill = jax.jit(model.prefill)
-        # Donate the pools where donation works (accelerators): the step
-        # updates one token per slot, so without buffer aliasing XLA
-        # would copy the whole O(pool) cache every step.  CPU rejects
-        # donation with a warning, so keep it off there.
+            layers=model.paged_kv_layers, n_blocks=n_blocks,
+            block_size=block_size, kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, dtype=pool_dtype)
+        # Non-KV per-slot sequence state (hybrid mamba); {} otherwise.
+        self._extras = model.paged_state_extras(max_slots)
+        self._extras_keys = tuple(self._extras)
+
+        # Trace counters: each jit cache miss re-traces the wrapped fn,
+        # so these count compiled variants (the O(log) assertions).
+        self.prefill_traces = 0
+        self.decode_traces = 0
+
+        def _chunk_fn(params, state, tokens, positions, fresh):
+            self.prefill_traces += 1
+            return model.forward(params, state, tokens, positions,
+                                 fresh=fresh)
+        self._chunk = jax.jit(_chunk_fn, static_argnames=("fresh",))
+
+        def _decode_fn(params, state, tokens, positions):
+            self.decode_traces += 1
+            return model.forward(params, state, tokens, positions)
+        # Donate the paged state where donation works (accelerators):
+        # the step updates one token per slot, so without buffer
+        # aliasing XLA would copy the whole O(pool) cache every step.
+        # CPU rejects donation with a warning, so keep it off there.
         donate = (1,) if jax.default_backend() in ("tpu", "gpu") else ()
-        self._step = jax.jit(model.paged_decode_step, donate_argnums=donate)
+        self._step = jax.jit(_decode_fn, donate_argnums=donate)
+
+        def _sample_fn(logits, base_keys, positions, temps, topks):
+            # per-token key = fold_in(request base key, position), folded
+            # on device so the decode loop pays no host dispatches
+            keys = jax.vmap(jax.random.fold_in)(base_keys, positions)
+            V = logits.shape[-1]
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            lf = logits.astype(jnp.float32)
+            srt = jnp.sort(lf, axis=-1)                        # ascending
+            kidx = jnp.clip(V - topks, 0, V - 1)
+            thr = jnp.take_along_axis(srt, kidx[:, None], axis=1)[:, 0]
+            mask = (topks > 0)[:, None] & (lf < thr[:, None])
+            scaled = jnp.where(mask, -jnp.inf, lf) \
+                / jnp.maximum(temps, 1e-6)[:, None]
+            sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+            return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+        self._sample = jax.jit(_sample_fn)
+
+        self._scatter_extras = jax.jit(
+            lambda pools, one, slot: jax.tree_util.tree_map(
+                lambda P, o: P.at[slot].set(o[0].astype(P.dtype)),
+                pools, one))
+
         self._slots: list[Request | None] = [None] * max_slots
         self._queue: list[Request] = []
         self._done: dict[int, Request] = {}
+        self._job: _PrefillJob | None = None
         self._next_rid = 0
         self._admission_seq = 0    # monotone: exact FIFO eviction priority
         self.step_count = 0
@@ -104,13 +196,42 @@ class ServingEngine:
 
     # ------------------------------- intake --------------------------------
 
-    def submit(self, prompt, max_new_tokens: int, arrival: int = 0) -> int:
+    def submit(self, prompt, max_new_tokens: int, arrival: int = 0,
+               temperature: float | None = None, top_k: int | None = None,
+               seed: int | None = None) -> int:
         req = Request(prompt=np.asarray(prompt, np.int32).reshape(-1),
                       max_new_tokens=max_new_tokens, arrival=arrival,
+                      temperature=self.temperature if temperature is None
+                      else temperature,
+                      top_k=self.top_k if top_k is None else top_k,
+                      seed=self.seed if seed is None else seed,
                       rid=self._next_rid)
         self._next_rid += 1
         self._queue.append(req)
         return req.rid
+
+    # ------------------------------ sampling -------------------------------
+
+    def _base_key(self, req: Request) -> np.ndarray:
+        """Per-request PRNG base: fold_in(PRNGKey(seed), rid) — stable
+        across eviction/requeue (so replay resamples identically) and
+        rid-decorrelated between same-prompt requests sharing the
+        engine-level seed.  The per-token key adds a fold over the
+        token's absolute position, on device inside ``_sample``."""
+        if req.base_key is None:
+            req.base_key = np.asarray(jax.random.fold_in(
+                jax.random.PRNGKey(req.seed), req.rid), np.uint32)
+        return req.base_key
+
+    def _pick_token(self, req: Request, logits_row, position: int) -> int:
+        if req.greedy:
+            return int(jnp.argmax(logits_row))
+        tok = self._sample(logits_row[None],
+                           jnp.asarray(self._base_key(req))[None],
+                           jnp.asarray([position], jnp.int32),
+                           jnp.asarray([req.temperature], jnp.float32),
+                           jnp.asarray([req.top_k], jnp.int32))
+        return int(tok[0])
 
     # ------------------------------ admission ------------------------------
 
@@ -118,7 +239,7 @@ class ServingEngine:
         """FIFO admission: prefill-or-restore into free slots while the
         pool can hold the prompt (strict order — no head-of-line skip,
         so admission latency stays predictable)."""
-        while self._queue and None in self._slots:
+        while self._queue and None in self._slots and self._job is None:
             req = self._queue[0]
             if req.arrival > self.step_count:
                 break
@@ -126,51 +247,121 @@ class ServingEngine:
                 break
             self._queue.pop(0)
 
-    def _start(self, req: Request) -> bool:
+    def _prefill_chunks(self, prompt: np.ndarray, cap: int) -> list:
+        """Split a prompt into (tokens, positions) chunk inputs.
+
+        Attention families pad to the capacity bucket (position -1 marks
+        padding: its cache write is dropped and the logit gather skips
+        it), so the compiled-shape count stays O(log max_prompt).
+        Recurrent-carrying families get exact-length chunks instead."""
+        s = len(prompt)
+        C = min(self.prefill_chunk or cap, cap)
+        chunks = []
+        if self.pad_prefill:
+            toks = np.zeros(cap, np.int32)
+            toks[:s] = prompt
+            pos = np.where(np.arange(cap) < s,
+                           np.arange(cap), -1).astype(np.int32)
+            for lo in range(0, cap, C):
+                chunks.append((toks[None, lo:lo + C], pos[None, lo:lo + C]))
+                if lo + C >= s:
+                    break
+        else:
+            for lo in range(0, s, C):
+                hi = min(lo + C, s)
+                chunks.append((prompt[None, lo:hi],
+                               np.arange(lo, hi, dtype=np.int32)[None]))
+        return chunks
+
+    def _start_job(self, req: Request) -> _PrefillJob | None:
         cache = self.cache
         s = len(req.prompt)
-        restored = (cache.lookup_prefix(req.prompt)
-                    if self.share_prefixes else None)
-        if restored is not None:
-            blocks, length, first = restored
-        else:
-            n = cache.blocks_for(s)
-            if cache.num_free < n:
-                cache.reclaim(n)
-            blocks = cache.alloc(n)
-            if blocks is None:
-                return False
-            dense, logits = self._prefill(self.params,
-                                          {"tokens": jnp.asarray(
-                                              req.prompt[None])})
-            # (L, b=1, s, kv, hd) -> (L, s, kv, hd)
-            cache.write_prompt(dense["k"][:, 0], dense["v"][:, 0], blocks)
-            first = int(jnp.argmax(logits[0]))
-            length = s
-            if self.share_prefixes:
-                cache.register_prefix(req.prompt, blocks, s, first)
+        n = cache.blocks_for(s)
+        if cache.num_free < n:
+            cache.reclaim(n)
+        blocks = cache.alloc(n)
+        if blocks is None:
+            return None
+        cap = _pow2_at_least(s, self.cache.block_size)
+        if self.pad_prefill and self.prefill_chunk:
+            # keep every padded chunk the same shape: round the capacity
+            # bucket up to a chunk multiple so no ragged tail compiles
+            # an extra variant per (chunk, cap) pair
+            C = min(self.prefill_chunk, cap)
+            cap = -(-cap // C) * C
+        state = self.model.init_seq_state(
+            self.params, cap, batch_size=1,
+            dtype=self.cfg.compute_dtype)
+        return _PrefillJob(req, state, self._prefill_chunks(req.prompt, cap),
+                           blocks)
+
+    def _advance_job(self, job: _PrefillJob) -> None:
+        toks, pos = job.chunks[job.next]
+        job.state, job.logits = self._chunk(
+            self.params, job.state, jnp.asarray(toks), jnp.asarray(pos),
+            job.next == 0)
+        job.next += 1
+
+    def _finish_job(self, job: _PrefillJob) -> None:
+        """Write the prefilled K/V into the reserved pool blocks and
+        occupy the slot."""
+        req, cache = job.req, self.cache
+        s = len(req.prompt)
+        # (L, b=1, cap, kv, hd) -> (L, s, kv, hd)
+        cache.write_prompt(job.state["k"][:, 0, :s],
+                           job.state["v"][:, 0, :s], job.blocks)
+        extras1 = {k: job.state[k] for k in self._extras_keys}
+        first = self._pick_token(req, job.logits[0], s)
+        if self.share_prefixes and req.greedy:
+            cache.register_prefix(req.prompt, job.blocks, s, first,
+                                  extras=extras1 or None)
+        self._occupy(req, job.blocks, s, first, extras1)
+
+    def _occupy(self, req: Request, blocks, length: int, first: int,
+                extras1: dict | None) -> None:
         req.blocks = blocks
         req.length = length
         req.tokens = [first]
         if req.done:        # max_new_tokens == 1: the prefill was enough
-            cache.free(blocks)
+            self.cache.free(blocks)
             req.blocks, req.status = [], "done"
             self._done[req.rid] = req
-            return True
+            return
         req.slot = self._slots.index(None)
+        if extras1:
+            self._extras = self._scatter_extras(
+                self._extras, extras1, jnp.asarray(req.slot))
         self._admission_seq += 1   # ties would invert FIFO preemption
         req.admitted_at = self._admission_seq
         req.status = "running"
         self._slots[req.slot] = req
+
+    def _start(self, req: Request) -> bool:
+        restored = None
+        if self.share_prefixes and req.greedy:
+            restored = self.cache.lookup_prefix(req.prompt)
+        if restored is not None:
+            blocks, length, first, extras = restored
+            self._occupy(req, blocks, length, first, extras)
+            return True
+        job = self._start_job(req)
+        if job is None:
+            return False
+        if self.prefill_chunk and any(r is not None for r in self._slots):
+            # chunked + a running batch: advance one chunk per step so
+            # admission interleaves with decode ticks
+            req.status = "prefilling"
+            self._job = job
+            return True
+        while not job.finished:
+            self._advance_job(job)
+        self._finish_job(job)
         return True
 
     # ------------------------------- decode --------------------------------
 
     def _bucket(self, n: int) -> int:
-        w = max(self.min_table_width, 2)
-        while w < n:
-            w *= 2
-        return w
+        return _pow2_at_least(n, max(self.min_table_width, 2))
 
     def _ensure_block(self, req: Request) -> bool:
         """Make sure the block table covers the next write position."""
@@ -184,15 +375,31 @@ class ServingEngine:
         req.blocks.extend(got)
         return True
 
+    def _cancel_job(self) -> None:
+        """Requeue the in-flight prefill job, releasing its reserved
+        blocks (the prefill compute is discarded — determinism makes the
+        redo exact)."""
+        job, self._job = self._job, None
+        req = job.req
+        self.cache.free(job.blocks)
+        req.status, req.arrival = "queued", self.step_count
+        self._queue.insert(0, req)
+        self.evictions += 1
+
     def _evict_for_space(self, needy: Request) -> bool:
-        """Pool exhausted mid-decode: preempt the *youngest* running
-        request — possibly ``needy`` itself — back to the queue.  The
+        """Pool exhausted mid-decode: preempt the *youngest* claimant —
+        the in-flight prefill job first (it holds reserved blocks and is
+        always younger than any runner), else the youngest running
+        request, possibly ``needy`` itself — back to the queue.  The
         oldest admission is never preempted by younger ones, so it
         monotonically runs to completion and frees its blocks: FIFO-
         priority preemption cannot livelock (evicting only "others"
         can ping-pong two requests that jointly exceed the pool
-        forever).  False iff ``needy`` is the sole runner — then the
+        forever).  False iff ``needy`` is the sole claimant — then the
         pool simply cannot hold one request and the caller raises."""
+        if self._job is not None:
+            self._cancel_job()
+            return True
         running = [r for r in self._slots if r is not None]
         if running == [needy]:
             return False
@@ -200,8 +407,13 @@ class ServingEngine:
         return True
 
     def evict(self, rid: int) -> None:
-        """Free a running request's blocks and restart it from the queue
-        (deterministic greedy decode -> identical tokens on re-entry)."""
+        """Free a running (or still-prefilling) request's blocks and
+        restart it from the queue (decode is deterministic given
+        (seed, position) -> identical tokens on re-entry, greedy or
+        sampled)."""
+        if self._job is not None and self._job.req.rid == rid:
+            self._cancel_job()
+            return
         for slot, req in enumerate(self._slots):
             if req is not None and req.rid == rid:
                 self._slots[slot] = None
@@ -215,12 +427,18 @@ class ServingEngine:
         raise KeyError(f"request {rid} is not running")
 
     def step(self) -> int:
-        """Admit, decode one token for every running request, retire.
-        Returns the number of tokens produced."""
+        """Advance the in-flight prefill by one chunk, admit, decode one
+        token for every running request, sample, retire.  Returns the
+        number of tokens produced."""
+        if self._job is not None:
+            self._advance_job(self._job)
+            if self._job.finished:
+                job, self._job = self._job, None
+                self._finish_job(job)
         self._admit()
         active = [r for r in self._slots if r is not None]
         if not active:
-            if (self._queue
+            if (self._job is None and self._queue
                     and self._queue[0].arrival <= self.step_count):
                 raise RuntimeError(
                     f"request {self._queue[0].rid} cannot be admitted even "
@@ -247,20 +465,39 @@ class ServingEngine:
         tables = np.zeros((self.max_slots, width), np.int32)
         lengths = np.zeros(self.max_slots, np.int32)
         tokens = np.zeros(self.max_slots, np.int32)
+        temps = np.zeros(self.max_slots, np.float32)
+        topks = np.zeros(self.max_slots, np.int32)
+        keys = np.zeros((self.max_slots, 2), np.uint32)
         for r in active:
             tables[r.slot, :len(r.blocks)] = r.blocks
             lengths[r.slot] = r.length
             tokens[r.slot] = r.tokens[-1]
+            temps[r.slot] = r.temperature
+            topks[r.slot] = r.top_k
+            if not r.greedy:
+                keys[r.slot] = self._base_key(r)
 
-        pools = {"k": self.cache.k, "v": self.cache.v}
-        pools, logits = self._step(self.params, pools,
-                                   jnp.asarray(tables),
-                                   jnp.asarray(lengths),
-                                   jnp.asarray(tokens))
-        self.cache.k, self.cache.v = pools["k"], pools["v"]
-        # argmax on device: ship (max_slots,) int32 to host, not the
-        # (max_slots, vocab) logits
-        next_toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        # the paged SeqState: block tables, per-slot lengths, and the
+        # per-slot PRNG keys ride inside the state pytree
+        state = {"k": self.cache.k, "v": self.cache.v,
+                 "block_tables": jnp.asarray(tables),
+                 "lengths": jnp.asarray(lengths),
+                 "rng": jnp.asarray(keys), **self._extras}
+        state, logits = self._step(self.params, state,
+                                   jnp.asarray(tokens)[:, None],
+                                   jnp.asarray(lengths)[:, None])
+        self.cache.k, self.cache.v = state["k"], state["v"]
+        self._extras = {k: state[k] for k in self._extras_keys}
+        # pick on device: ship (max_slots,) int32 to host, not the
+        # (max_slots, vocab) logits; an all-greedy step (the default)
+        # skips the full-vocab sort the top-k sampler needs
+        if all(r.greedy for r in active):
+            next_toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        else:
+            # token about to be sampled lands at position length + 1
+            next_toks = np.asarray(self._sample(
+                logits, state["rng"], jnp.asarray(lengths) + 1,
+                jnp.asarray(temps), jnp.asarray(topks)), np.int32)
 
         produced = 0
         for r in active:
@@ -280,7 +517,8 @@ class ServingEngine:
     def run(self, max_steps: int = 100_000) -> dict[int, np.ndarray]:
         """Step until queue and slots drain; {rid: (max_new_tokens,)}."""
         for _ in range(max_steps):
-            if not self._queue and all(s is None for s in self._slots):
+            if (not self._queue and self._job is None
+                    and all(s is None for s in self._slots)):
                 break
             self.step()
         else:
@@ -298,4 +536,6 @@ class ServingEngine:
             "evictions": self.evictions,
             "prefix_hit_rate": self.cache.hit_rate,
             "free_blocks": self.cache.num_free,
+            "prefill_traces": self.prefill_traces,
+            "decode_traces": self.decode_traces,
         }

@@ -78,7 +78,8 @@ class PagedKVCache:
         self.refcount = np.zeros(n_blocks, np.int64)
         self.refcount[0] = 1                       # scratch, never freed
         self._free = list(range(n_blocks - 1, 0, -1))   # pop() -> low ids
-        self._prefix: dict[str, tuple[tuple[int, ...], int, int]] = {}
+        # key -> (block ids, length, first greedy token, extras pytree)
+        self._prefix: dict[str, tuple] = {}
         self._prefix_lru: list[str] = []
         self.hits = 0
         self.misses = 0
@@ -140,21 +141,23 @@ class PagedKVCache:
     # --------------------------- prefix sharing ----------------------------
 
     def register_prefix(self, tokens: np.ndarray, block_ids, length: int,
-                        first_token: int) -> None:
+                        first_token: int, extras=None) -> None:
         """Pin ``block_ids`` (incref) under the prefix hash so later
         identical prompts restore by reference.  ``first_token`` is the
         greedy continuation from the prefill logits — the one piece of
-        state a block-level restore cannot reconstruct."""
+        state a block-level restore cannot reconstruct.  ``extras`` is
+        an optional pytree of non-KV sequence state the blocks cannot
+        carry (the hybrid family's mamba states after the prompt)."""
         key = _prefix_key(tokens)
         if key in self._prefix:
             return
         self.incref(block_ids)
-        self._prefix[key] = (tuple(block_ids), length, first_token)
+        self._prefix[key] = (tuple(block_ids), length, first_token, extras)
         self._prefix_lru.append(key)
 
     def lookup_prefix(self, tokens: np.ndarray):
-        """Exact-prefix hit -> (block_ids, length, first_token) with the
-        new sequence holding its own references; None on miss.
+        """Exact-prefix hit -> (block_ids, length, first_token, extras)
+        with the new sequence holding its own references; None on miss.
 
         Full blocks are shared (incref).  A partial trailing block is
         copied because the restored sequence will append into it; if the
@@ -166,7 +169,7 @@ class PagedKVCache:
         if ent is None:
             self.misses += 1
             return None
-        ids, length, first_token = ent
+        ids, length, first_token, extras = ent
         if length % self.block_size == 0:
             self.incref(ids)
             blocks = list(ids)
@@ -186,7 +189,7 @@ class PagedKVCache:
         if key in self._prefix_lru:     # refresh LRU position
             self._prefix_lru.remove(key)
             self._prefix_lru.append(key)
-        return blocks, length, first_token
+        return blocks, length, first_token, extras
 
     def reclaim(self, n_blocks: int, *, keep: tuple = ()) -> bool:
         """Release LRU prefix entries until ``n_blocks`` are allocatable.
@@ -197,7 +200,7 @@ class PagedKVCache:
             if key is None:
                 break
             self._prefix_lru.remove(key)
-            ids, _, _ = self._prefix.pop(key)
+            ids = self._prefix.pop(key)[0]
             self.free(ids)
         return self.num_free >= n_blocks
 

@@ -39,15 +39,20 @@ def batch_pspecs(specs_tree, resolver: Resolver):
     return jax.tree_util.tree_map(one, specs_tree)
 
 
-def cache_pspecs(model, shape: ShapeConfig, resolver: Resolver):
-    specs = model.cache_specs(shape)
-    axes = model.cache_axes(shape)
+def seq_state_pspecs(model, shape: ShapeConfig, resolver: Resolver):
+    """PartitionSpecs for a SeqState (the serving-side state pytree)."""
+    specs = model.seq_state_specs(shape)
+    axes = model.seq_state_axes(shape)
 
     def one(sds, ax):
         return resolver.act_spec(tuple(ax), sds.shape)
     return jax.tree_util.tree_map(
         one, specs, axes,
         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# Back-compat alias (pre-SeqState name).
+cache_pspecs = seq_state_pspecs
 
 
 def to_named(tree_specs, mesh):
@@ -151,21 +156,29 @@ def make_train_step(model, optimizer, pcfg: ParallelConfig, mesh):
 
 
 def make_serve_step(model, pcfg: ParallelConfig, mesh):
+    """One chunk of the chunk-oriented serving API: decode is T=1,
+    chunked prefill is T=chunk — the same step lowers both."""
     resolver = Resolver(mesh, pcfg)
 
-    def serve_step(params, cache, tokens):
+    def serve_step(params, state, tokens, positions):
         with use_resolver(resolver):
-            return model.decode_step(params, cache, tokens)
+            return model.forward(params, state, tokens, positions)
 
     return serve_step
 
 
 def make_prefill_step(model, pcfg: ParallelConfig, mesh):
+    """Whole-prompt serve entry: fresh SeqState + one monolithic chunk."""
     resolver = Resolver(mesh, pcfg)
 
     def prefill_step(params, batch):
         with use_resolver(resolver):
-            return model.prefill(params, batch)
+            tokens, positions, embeds = model.prompt_inputs(params, batch)
+            b, s = positions.shape
+            state = model.init_seq_state(params, s, batch=batch,
+                                         batch_size=b)
+            return model.forward(params, state, tokens, positions,
+                                 embeds=embeds, fresh=True)
 
     return prefill_step
 

@@ -1,0 +1,370 @@
+"""Chunk-oriented SeqState model API: prefill = decode = a chunk.
+
+Covers the unified ``init_seq_state``/``forward`` contract across all
+families (chunked prefill at any chunk size reproduces monolithic
+prefill + decode greedy tokens), the engine's bucketed O(log) prefill
+compile count, the hybrid family on the paged path, sampled decode
+(reproducible under a fixed seed, invariant under eviction/requeue
+replay), kind="chunk" ShapeConfig specs, and the guard that nothing in
+src/ outside model_api.py calls the deprecated prefill/decode_step/
+paged_decode_step trio.
+"""
+import dataclasses as dc
+import pathlib
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import smoke_config
+from repro.data.synthetic import batch_for_model
+from repro.models import build_model
+from repro.serve_lib import BatchServer
+from repro.serving import ServingEngine
+
+GEN = 5
+PROMPT = 18          # deliberately not a chunk/block multiple
+
+FAMILY_ARCHS = [
+    "codeqwen1.5-7b",       # dense
+    "qwen2-moe-a2.7b",      # moe
+    "zamba2-1.2b",          # hybrid
+    "xlstm-125m",           # ssm
+    "whisper-base",         # audio
+    "internvl2-76b",        # vlm
+]
+
+
+def _build(arch, **over):
+    cfg = dc.replace(smoke_config(arch), n_layers=2,
+                     compute_dtype="float32", **over)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prefill_batch(cfg, n=2, seed=0, length=PROMPT):
+    return {k: jnp.asarray(v) for k, v in
+            batch_for_model(cfg, "prefill", seed, n, length).items()}
+
+
+def _generate(model, params, batch, chunk_sizes, gen=GEN,
+              dtype="float32"):
+    """Prefill via the given chunk plan, then greedy-decode ``gen``
+    tokens — all through the one forward() entry point."""
+    fwd = jax.jit(model.forward, static_argnames=("fresh",))
+    tokens, positions, embeds = model.prompt_inputs(params, batch)
+    b, s = positions.shape
+    state = model.init_seq_state(params, s + gen, batch=batch,
+                                 batch_size=b, dtype=dtype)
+    off, logits = 0, None
+    for i, c in enumerate(chunk_sizes):
+        tk = None if tokens is None else tokens[:, off:off + c]
+        em = None if embeds is None else embeds[:, off:off + c]
+        state, logits = fwd(params, state, tk, positions[:, off:off + c],
+                            embeds=em, fresh=(i == 0))
+        off += c
+    assert off == s, "chunk plan must cover the prompt exactly"
+    toks = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [np.asarray(toks)]
+    for i in range(gen - 1):
+        pos = jnp.full((b, 1), s + i, jnp.int32)
+        state, logits = fwd(params, state, toks[:, None], pos)
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(np.asarray(toks))
+    return np.stack(out, 1)
+
+
+# --------------- chunked prefill == monolithic, all families ---------------
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_chunked_prefill_matches_monolithic(arch):
+    """Greedy tokens are invariant to how the prompt is chunked: chunk
+    sizes 1, 16, and the whole prompt all reproduce monolithic
+    prefill + decode, for every model family."""
+    cfg, model, params = _build(arch)
+    batch = _prefill_batch(cfg)
+    _, positions, _ = model.prompt_inputs(params, batch)
+    s = positions.shape[1]     # vlm: includes the patch tokens
+    mono = _generate(model, params, batch, [s])
+    for plan in ([1] * s, [16, s - 16]):
+        got = _generate(model, params, batch, plan)
+        np.testing.assert_array_equal(
+            mono, got, err_msg=f"{arch}: chunk plan {plan[0]}x{len(plan)} "
+            f"diverged from monolithic prefill")
+
+
+def test_late_arriving_slot_positions():
+    """Per-slot positions (not a shared scalar index): one slot decodes
+    its 6th token while another prefills at position 0 in the same
+    forward call, and both match their lockstep references."""
+    cfg, model, params = _build("codeqwen1.5-7b")
+    batch = _prefill_batch(cfg, n=2)
+    ref = _generate(model, params, batch, [PROMPT])
+    fwd = jax.jit(model.forward, static_argnames=("fresh",))
+    tokens, positions, _ = model.prompt_inputs(params, batch)
+
+    # slot 0 runs the full prompt; slot 1's lane is garbage until it
+    # "arrives": replay its prompt token-by-token at its own positions
+    # beside slot 0's decode steps.
+    state = model.init_seq_state(params, PROMPT + GEN, batch_size=2,
+                                 dtype="float32")
+    state, logits = fwd(
+        params, state,
+        jnp.stack([tokens[0], jnp.zeros_like(tokens[0])]),
+        jnp.stack([positions[0], jnp.full((PROMPT,), -1, jnp.int32)]),
+        fresh=True)
+    toks0 = [int(jnp.argmax(logits[0]))]
+    for i in range(PROMPT):                    # slot 1 arrives late
+        tk = jnp.asarray([[toks0[-1] if i > 0 else toks0[0]],
+                          [int(tokens[1, i])]], jnp.int32)
+        # slot 0 only advances on its first GEN-1 of these steps
+        p0 = PROMPT + i if i < GEN - 1 else -1
+        pos = jnp.asarray([[p0], [i]], jnp.int32)
+        state, logits = fwd(params, state, tk, pos)
+        if i < GEN - 1:
+            toks0.append(int(jnp.argmax(logits[0])))
+    np.testing.assert_array_equal(ref[0], np.asarray(toks0[:GEN]))
+    # slot 1 just finished its prompt: its logits row now matches the
+    # monolithic first token
+    assert int(jnp.argmax(logits[1])) == int(ref[1][0])
+
+
+# ---------------------- bucketed prefill compile count ----------------------
+
+
+def test_engine_prefill_compiles_olog():
+    """Prompts of N distinct lengths compile O(log max_prompt) prefill
+    variants (capacity bucketed to powers of two, position-indexed
+    last-token gather), not N."""
+    cfg, model, params = _build("codeqwen1.5-7b")
+    lengths = list(range(3, 43, 4))            # 10 distinct lengths
+    eng = ServingEngine(model, params, n_blocks=64, block_size=16,
+                        max_slots=2, share_prefixes=False)
+    for i, s in enumerate(lengths):
+        prompt = np.arange(s, dtype=np.int32) % cfg.vocab_size
+        eng.submit(prompt, 1)                  # prefill-only requests
+    eng.run()
+    max_prompt = max(lengths)
+    log_bound = int(np.ceil(np.log2(max_prompt))) + 1
+    assert eng.prefill_traces <= log_bound < len(lengths), \
+        f"{eng.prefill_traces} prefill compiles for {len(lengths)} lengths"
+
+
+def test_engine_chunked_prefill_matches_dense(arch="codeqwen1.5-7b"):
+    """--prefill-chunk admission (chunks interleaved with running decode
+    ticks) still reproduces the dense-path tokens exactly."""
+    cfg, model, params = _build(arch)
+    batch = _prefill_batch(cfg, n=3)
+    ref = _generate(model, params, batch, [PROMPT], dtype="bfloat16")
+    eng = ServingEngine(model, params, n_blocks=32, block_size=16,
+                        max_slots=2, prefill_chunk=8, share_prefixes=False)
+    prompts = np.asarray(batch["tokens"])
+    rids = [eng.submit(row, GEN, arrival=i) for i, row in
+            enumerate(prompts)]
+    outs = eng.run()
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(ref[i], outs[rid])
+    # chunked shapes: (chunk, cap) pairs, still a small compile count
+    assert eng.prefill_traces <= 4
+
+
+def test_prefill_job_evictable_under_pool_pressure():
+    """Pool pressure while a chunked prefill is in flight preempts the
+    job (releasing its reserved blocks) instead of crashing, and the
+    preempted request still completes with exact tokens."""
+    cfg, model, params = _build("codeqwen1.5-7b")
+    batch = _prefill_batch(cfg, n=2, length=30)
+    ref = _generate(model, params, batch, [30], gen=10, dtype="bfloat16")
+    prompts = np.asarray(batch["tokens"])
+    # 5 usable blocks: req0 needs 2 for its prompt + more as it decodes;
+    # req1's job reserves 2 — req0's next block forces a job preemption
+    eng = ServingEngine(model, params, n_blocks=6, block_size=16,
+                        max_slots=2, prefill_chunk=8, share_prefixes=False)
+    rids = [eng.submit(row, 10, arrival=i) for i, row in
+            enumerate(prompts)]
+    outs = eng.run()
+    assert eng.evictions >= 1
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(ref[i], outs[rid])
+
+
+# ------------------------- hybrid joins the paged path ----------------------
+
+
+def test_hybrid_paged_matches_dense():
+    """The hybrid family end-to-end under decode_impl='paged': paged
+    attention blocks + per-slot mamba state reproduce the dense path."""
+    cfg, model, params = _build("zamba2-1.2b")
+    batch = _prefill_batch(cfg, n=3)
+    dense_out, _ = BatchServer(model, params, None).serve(batch, gen=GEN)
+    paged = BatchServer(model, params, None, decode_impl="paged",
+                        engine_kwargs=dict(n_blocks=32, block_size=16,
+                                           max_slots=2))
+    paged_out, info = paged.serve(batch, gen=GEN)
+    np.testing.assert_array_equal(dense_out, paged_out)
+    assert info["steps"] > 0
+
+
+def test_hybrid_paged_eviction_and_prefix():
+    """Hybrid eviction/requeue replays identically (mamba state is
+    rebuilt by re-prefill) and a prefix hit restores the mamba state
+    alongside the shared blocks."""
+    cfg, model, params = _build("zamba2-1.2b")
+    batch = _prefill_batch(cfg, n=2)
+    ref, _ = BatchServer(model, params, None).serve(batch, gen=GEN)
+    prompts = np.asarray(batch["tokens"])
+    eng = ServingEngine(model, params, n_blocks=32, block_size=16,
+                        max_slots=2)
+    rids = [eng.submit(row, GEN) for row in prompts]
+    eng.step()
+    running = [r for r in eng._slots if r is not None]
+    eng.evict(running[-1].rid)
+    outs = eng.run()
+    assert eng.evictions == 1
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(ref[i], outs[rid])
+    # resubmit the first prompt: restored by reference, same tokens
+    r2 = eng.submit(prompts[0], GEN)
+    outs2 = eng.run()
+    assert eng.cache.hits >= 1
+    np.testing.assert_array_equal(ref[0], outs2[r2])
+
+
+# ------------------------------ sampled decode ------------------------------
+
+
+def _sampled_trace(model, params, prompts, *, evict_at=None, seed=7):
+    eng = ServingEngine(model, params, n_blocks=32, block_size=16,
+                        max_slots=2, temperature=0.8, top_k=8, seed=seed)
+    rids = [eng.submit(row, GEN) for row in prompts]
+    if evict_at is not None:
+        for _ in range(evict_at):
+            eng.step()
+        running = [r for r in eng._slots if r is not None]
+        eng.evict(running[-1].rid)
+    outs = eng.run()
+    return [outs[r] for r in rids], eng
+
+
+def test_sampled_decode_reproducible_and_replayable():
+    """Sampling is a pure function of (seed, position): two runs agree,
+    and an eviction/requeue replay resamples the same tokens — the
+    invariant that keeps preemption safe off the greedy path."""
+    cfg, model, params = _build("codeqwen1.5-7b")
+    prompts = np.asarray(_prefill_batch(cfg, n=2)["tokens"])
+    a, eng_a = _sampled_trace(model, params, prompts)
+    b, _ = _sampled_trace(model, params, prompts)
+    c, eng_c = _sampled_trace(model, params, prompts, evict_at=2)
+    for x, y, z in zip(a, b, c):
+        np.testing.assert_array_equal(x, y)
+        np.testing.assert_array_equal(x, z)
+    assert eng_c.evictions == 1
+    # different seeds should decouple the streams
+    d, _ = _sampled_trace(model, params, prompts, seed=8)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, d))
+
+
+def test_sampled_greedy_default_unchanged():
+    """temperature=0 (the default) stays bit-identical to argmax."""
+    cfg, model, params = _build("codeqwen1.5-7b")
+    batch = _prefill_batch(cfg, n=2)
+    ref = _generate(model, params, batch, [PROMPT], dtype="bfloat16")
+    eng = ServingEngine(model, params, n_blocks=32, block_size=16,
+                        max_slots=2)
+    rids = [eng.submit(row, GEN) for row in np.asarray(batch["tokens"])]
+    outs = eng.run()
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(ref[i], outs[rid])
+
+
+@pytest.mark.parametrize("arch", ["zamba2-1.2b", "xlstm-125m"])
+def test_recurrent_ragged_prompt_lengths(arch):
+    """Prompts longer than ssm.chunk_size and not a multiple of it
+    (ragged SSD/mLSTM tail) must still serve — chunked and monolithic
+    alike (regression: the chunk scans asserted l % chunk == 0)."""
+    cfg, model, params = _build(arch)
+    assert cfg.ssm.chunk_size == 32
+    batch = _prefill_batch(cfg, n=2, length=40)    # 40 % 32 != 0
+    mono = _generate(model, params, batch, [40])
+    got = _generate(model, params, batch, [16, 16, 8])
+    np.testing.assert_array_equal(mono, got)
+    if cfg.family == "hybrid":                     # and the paged engine
+        ref = _generate(model, params, batch, [40], dtype="bfloat16")
+        eng = ServingEngine(model, params, n_blocks=48, block_size=16,
+                            max_slots=2, share_prefixes=False)
+        rids = [eng.submit(row, GEN) for row in np.asarray(batch["tokens"])]
+        outs = eng.run()
+        for i, rid in enumerate(rids):
+            np.testing.assert_array_equal(ref[i], outs[rid])
+
+
+def test_sampled_same_prompt_decorrelated():
+    """Two concurrent sampled requests for the same prompt under the
+    shared engine seed must not emit identical streams (keys fold in
+    the rid), while each stream stays individually replayable."""
+    cfg, model, params = _build("codeqwen1.5-7b")
+    prompt = np.asarray(_prefill_batch(cfg, n=1)["tokens"])[0]
+    eng = ServingEngine(model, params, n_blocks=32, block_size=16,
+                        max_slots=2, temperature=1.0, seed=3,
+                        share_prefixes=False)
+    r0 = eng.submit(prompt, 8)
+    r1 = eng.submit(prompt, 8)
+    outs = eng.run()
+    assert not np.array_equal(outs[r0], outs[r1])
+
+
+# ------------------------- kind="chunk" shape specs -------------------------
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_chunk_shape_specs(arch):
+    """A kind='chunk' ShapeConfig describes a chunked-prefill forward()
+    invocation: state specs round-trip through eval_shape."""
+    cfg, model, params = _build(arch)
+    b = 2
+    shape = ShapeConfig("chunk_t", seq_len=64, global_batch=b,
+                        kind="chunk", chunk=8)
+    bspecs = model.batch_specs(shape)
+    assert bspecs["tokens"].shape == (b, 8)
+    assert bspecs["positions"].shape == (b, 8)
+    sspecs = model.seq_state_specs(shape)
+    pshapes = model.param_shapes()
+    out_state, logits = jax.eval_shape(
+        lambda p, s, t, pos: model.forward(p, s, t, pos),
+        pshapes, sspecs, bspecs["tokens"], bspecs["positions"])
+    assert logits.shape == (b, cfg.vocab_size)
+    assert (jax.tree_util.tree_structure(out_state)
+            == jax.tree_util.tree_structure(sspecs))
+    same = jax.tree_util.tree_map(lambda a, r: a.shape == r.shape,
+                                  out_state, sspecs)
+    assert all(jax.tree_util.tree_leaves(same))
+    # decode is the chunk=1 degenerate case of the same specs
+    dshape = ShapeConfig("dec_t", seq_len=64, global_batch=b, kind="decode")
+    assert model.batch_specs(dshape)["tokens"].shape == (b, 1)
+
+
+# ----------------------------- deprecation guard ----------------------------
+
+
+def test_deprecated_trio_not_called_in_src():
+    """The pre-chunk API (prefill / decode_step / paged_decode_step)
+    survives only as shims in model_api.py: nothing else under src/
+    may reference them."""
+    root = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+    pat = re.compile(r"\.(prefill|decode_step|paged_decode_step)\b")
+    offenders = []
+    for path in root.rglob("*.py"):
+        if path.name == "model_api.py":
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{path.relative_to(root)}:{lineno}: "
+                                 f"{line.strip()}")
+    assert not offenders, \
+        "deprecated model API called outside model_api.py:\n" + \
+        "\n".join(offenders)

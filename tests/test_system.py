@@ -57,7 +57,10 @@ def test_dryrun_input_specs():
     try:
         from repro.launch.dryrun import input_specs
         specs = input_specs("whisper-base", "decode_32k")
-        assert "cache" in specs and "params" in specs and "tokens" in specs
+        assert "seq_state" in specs and "params" in specs
+        assert specs["tokens"].shape == specs["positions"].shape
+        specs = input_specs("codeqwen1.5-7b", "chunk_2k")
+        assert specs["tokens"].shape[1] == 2048      # a prefill chunk
         specs = input_specs("qwen3-moe-235b-a22b", "train_4k")
         assert "state" in specs and "batch" in specs
     finally:
