@@ -35,6 +35,10 @@ from benchmarks.common import emit
 
 OUT_PATH = os.environ.get("REPRO_BENCH_DECODE", "BENCH_decode.json")
 KV_BYTES = 2     # bfloat16 pool/cache entries
+# Quantized pools store 1 byte per K/V value plus one fp32 absmax scale
+# per cached token per pool (DESIGN.md §9) — the +4 below.
+_KV_BYTES = {"bfloat16": 2, "float8_e4m3": 1, "int8": 1}
+_SCALE_BYTES = 4
 
 
 def _cases():
@@ -48,9 +52,12 @@ def _cases():
                 ttft_chunks=(0, 8, 16))
 
 
-def _hbm_per_token(cfg, *, dense_cap, paged_blocks, block):
+def _hbm_per_token(cfg, *, dense_cap, paged_blocks, block,
+                   kv_dtype="bfloat16"):
     """Attention-cache HBM bytes one sequence moves to decode one token."""
-    per_pos = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim * KV_BYTES
+    per_pos = 2 * cfg.n_layers * (
+        cfg.n_kv_heads * cfg.head_dim * _KV_BYTES[kv_dtype]
+        + (_SCALE_BYTES if _KV_BYTES[kv_dtype] < 2 else 0))
     return dense_cap * per_pos, paged_blocks * block * per_pos
 
 
@@ -85,6 +92,47 @@ def _ttft_sweep(model, params, c):
                      "prefill_traces": eng.prefill_traces})
         emit(f"decode.ttft.chunk{chunk}", ttft * 1e6,
              f"traces={eng.prefill_traces}")
+    return rows
+
+
+def _kv_dtype_sweep(model, params, cfg, c):
+    """Quantized paged decode: steps/s + analytic HBM bytes/token per
+    ``kv_dtype``.  The byte win is what fp8/int8 KV blocks exist for —
+    decode is cache-bandwidth-bound, so halving the block bytes roughly
+    halves the per-token HBM traffic (scales add 4 B/token per pool)."""
+    from repro.data.synthetic import batch_for_model
+    from repro.serving import ServingEngine
+
+    b, prompt, gen, block = 2, c["prompt"], c["gen"], c["block"]
+    steps = max((gen - 1) * c["repeat"], 1)
+    batch = batch_for_model(cfg, "prefill", 0, b, prompt)
+    max_blocks = -(-(prompt + steps + gen) // block)
+    rows = []
+    for kv_dtype in ("bfloat16", "float8_e4m3", "int8"):
+        eng = ServingEngine(model, params, n_blocks=b * max_blocks + 1,
+                            block_size=block, max_slots=b,
+                            min_table_width=max_blocks,
+                            kv_dtype=kv_dtype)
+        for row in np.asarray(batch["tokens"]):
+            eng.submit(row, steps + gen)
+        eng.step()                                        # admit + compile
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            eng.step()
+        us = (time.perf_counter() - t0) / steps * 1e6
+        held = max(len(r.blocks) for r in eng._slots if r is not None)
+        _, hbm = _hbm_per_token(cfg, dense_cap=0, paged_blocks=held,
+                                block=block, kv_dtype=kv_dtype)
+        rows.append({"kv_dtype": kv_dtype, "batch": b,
+                     "paged_us_per_step": us,
+                     "paged_steps_per_s": 1.0 / (us * 1e-6),
+                     "paged_tokens_per_s": b / (us * 1e-6),
+                     "paged_blocks_held": held,
+                     "hbm_bytes_per_token_paged": hbm})
+        emit(f"decode.kv.{kv_dtype}", us, f"hbm_per_tok={hbm}")
+    base = rows[0]["hbm_bytes_per_token_paged"]
+    for r in rows:
+        r["hbm_vs_bf16"] = r["hbm_bytes_per_token_paged"] / base
     return rows
 
 
@@ -171,13 +219,17 @@ def run():
              f"hbm_per_tok={hbm_paged} impl={impl}")
 
     ttft = _ttft_sweep(model, params, c)
+    kv_sweep = _kv_dtype_sweep(model, params, cfg, c)
     payload = {"backend": jax.default_backend(), "cases": records,
-               "ttft_vs_prefill_chunk": ttft}
+               "ttft_vs_prefill_chunk": ttft,
+               "kv_dtype_sweep": kv_sweep}
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)
     emit("decode.bench_written", 0,
-         f"{OUT_PATH}({len(records)}cases+{len(ttft)}ttft)")
-    return {"ok": True, "cases": records, "ttft": ttft}
+         f"{OUT_PATH}({len(records)}cases+{len(ttft)}ttft"
+         f"+{len(kv_sweep)}kv)")
+    return {"ok": True, "cases": records, "ttft": ttft,
+            "kv_dtype_sweep": kv_sweep}
 
 
 if __name__ == "__main__":

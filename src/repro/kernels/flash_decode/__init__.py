@@ -1,15 +1,13 @@
-"""Paged flash-decode: fused Pallas TPU kernel + jnp oracle.
+"""Paged flash-decode: DEPRECATED T=1 shim + its jnp oracle.
 
-The decode-time sibling of ``kernels.flash_attention``: one query token
-per sequence, K/V gathered from a block-paged pool through a per-
-sequence block table (scalar-prefetched so the gather is resolved at
-DMA-issue time), online softmax with GQA broadcast on-chip.  "kernel"
-compiles for TPU; "interpret" runs the same kernel through the Pallas
-interpreter (CPU tests); "ref" is the pure-jnp oracle that gathers the
-blocks densely.
-
-Consumed by ``models.attention.paged_decode_attention`` and, through
-it, the continuous-batching engine in ``repro.serving``.
+The fused one-token kernel that used to live here was subsumed by
+``kernels.paged_chunk_attention`` (any chunk width T >= 1, same
+scalar-prefetched block-table gather and GQA-on-chip online softmax,
+plus quantized-pool dequant); ``flash_decode`` survives as a thin T=1
+wrapper over it so external callers and the kernel parity tests keep
+working.  Nothing in src/repro outside this package may call it — CI
+guards it.  New code should use ``models.attention.paged_chunk_attn``
+or the ``kernels.paged_chunk_attention`` op directly.
 """
 from repro.kernels.flash_decode.ops import flash_decode
 from repro.kernels.flash_decode.ref import flash_decode_ref

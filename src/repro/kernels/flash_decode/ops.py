@@ -1,52 +1,40 @@
-"""Jitted dispatch wrapper for the paged flash-decode kernel.
+"""DEPRECATED: ``flash_decode`` is a thin T=1 shim over
+``kernels.paged_chunk_attention``.
 
-``flash_decode`` takes the flat-head query layout used by the models
-((b, h, d)) plus the paged pool, regroups q to (b, kvh, group, d) so the
-kernel keeps GQA on-chip, and pads the group axis up to the fp32
-sublane count (8) so the (group, d) q tile and (group, block) score
-tile stay sublane-aligned on hardware.  Padded query rows are all-zero
-and their outputs are sliced off; they cannot perturb real rows because
-each row's softmax is independent.
+The original one-token online-softmax kernel body lived here until the
+chunk-attention op subsumed it (same scalar-prefetched block-table
+gather, same GQA-on-chip accumulation, any chunk width T >= 1).  The
+public name and signature survive for external callers and for the
+kernel test suite — which now exercises the unified kernel through this
+shim — but nothing in src/repro outside this package may call it (CI
+guards it, like the PR 5 prefill/decode_step trio).
 
-Decode is inference-only, so no custom_vjp here — there is no backward.
+The lengths contract maps exactly onto the chunk contract: "valid key
+positions < lengths" == "key positions <= lengths - 1", and the single
+query's absolute position *is* ``lengths - 1`` (write-then-attend).
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels.flash_decode.kernel import flash_decode_kernel
-from repro.kernels.flash_decode.ref import flash_decode_ref
-
-_SUBLANE = 8     # fp32 sublane count: group-axis padding granularity
+from repro.kernels.paged_chunk_attention import paged_chunk_attention
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
 def flash_decode(q, k_pool, v_pool, block_tables, lengths, *, impl="auto"):
-    """Paged single-token decode attention.
+    """Paged single-token decode attention (deprecated T=1 shim).
 
     q (b, h, d); k_pool/v_pool (n_blocks, block_size, kvh, d);
-    block_tables (b, nbmax) int32 (physical block id of each logical
-    block, padded entries must reference a valid block); lengths (b,)
-    int32 (valid key positions are < length) -> (b, h, d) in q.dtype.
+    block_tables (b, nbmax) int32 (padded entries must reference a
+    valid block); lengths (b,) int32 (valid key positions are
+    < length) -> (b, h, d) in q.dtype.
 
     impl: 'auto' (kernel on TPU, ref otherwise) | 'kernel' | 'interpret'
     | 'ref'.
     """
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
-    if impl == "ref":
-        return flash_decode_ref(q, k_pool, v_pool, block_tables, lengths)
-    b, h, d = q.shape
-    kvh = k_pool.shape[2]
-    assert h % kvh == 0, (h, kvh)
-    group = h // kvh
-    gp = -(-group // _SUBLANE) * _SUBLANE
-    qg = q.reshape(b, kvh, group, d)
-    if gp != group:
-        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - group), (0, 0)))
-    o = flash_decode_kernel(qg, k_pool, v_pool, block_tables, lengths,
-                            interpret=impl == "interpret")
-    return o[:, :, :group].reshape(b, h, d)
+    o = paged_chunk_attention(q[:, None], k_pool, v_pool, block_tables,
+                              (lengths - 1)[:, None].astype("int32"),
+                              impl=impl)
+    return o[:, 0]

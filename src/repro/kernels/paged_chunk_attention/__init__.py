@@ -1,0 +1,25 @@
+"""Paged chunk-attention: one fused Pallas op for the whole serving path.
+
+The unification of ``kernels.flash_attention`` (contiguous prefill) and
+the old T=1-only flash-decode kernel: a chunk of T >= 1 query tokens per
+sequence attends a block-paged KV pool through a per-sequence block
+table (scalar-prefetched so the gather resolves at DMA-issue time),
+with per-row absolute-position causal masking (negative = padding ->
+zero rows), GQA on-chip, online softmax, and optional fp8/int8 pools
+dequantized in-kernel via per-token absmax scales.  Prefill chunks
+(T = chunk), decode ticks (T = 1), and speculative verify windows
+(T = draft length) all lower to this one op.
+
+"kernel" compiles for TPU; "interpret" runs the same kernel through the
+Pallas interpreter (CPU tests); "ref" is the pure-jnp masked (T, S)
+oracle — the retired hot path, kept as the off-TPU fallback.
+
+Consumed by ``models.attention`` (``chunk_attention`` under
+``cfg.attn_impl``, ``paged_chunk_attn``) and, through it, the
+continuous-batching engine in ``repro.serving``; the old flash-decode
+entry point survives only as a deprecated T=1 shim over this op.
+"""
+from repro.kernels.paged_chunk_attention.ops import paged_chunk_attention
+from repro.kernels.paged_chunk_attention.ref import paged_chunk_attention_ref
+
+__all__ = ["paged_chunk_attention", "paged_chunk_attention_ref"]

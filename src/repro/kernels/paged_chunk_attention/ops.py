@@ -1,0 +1,75 @@
+"""Jitted dispatch wrapper for the paged chunk-attention kernel.
+
+``paged_chunk_attention`` takes the flat-head chunk layout used by the
+models ((b, T, h, d)) plus the paged pool, flattens (T, GQA group) into
+one row axis so the kernel keeps GQA on-chip, and pads the row count up
+to the fp32 sublane count (8) so the (R, d) q tile and (R, block) score
+tiles stay sublane-aligned on hardware.  Padded rows carry position -1,
+which the kernel's per-row mask turns into exact zero outputs — the
+same mechanism chunk padding uses — and they are sliced off before
+returning.
+
+Inference-only, so no custom_vjp here — there is no backward.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_chunk_attention.kernel import \
+    paged_chunk_attention_kernel
+from repro.kernels.paged_chunk_attention.ref import paged_chunk_attention_ref
+
+_SUBLANE = 8     # fp32 sublane count: row-axis padding granularity
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_chunk_attention(q, k_pool, v_pool, block_tables, positions,
+                          k_scale=None, v_scale=None, *, impl="auto"):
+    """Chunk-of-T-tokens attention against a block-paged KV pool.
+
+    q (b, T, h, d) for any T >= 1; k_pool/v_pool (n_blocks, block_size,
+    kvh, d) in bfloat16, float8_e4m3 or int8; block_tables (b, nbmax)
+    int32 (physical block id of each logical block, padded entries must
+    reference a valid block); positions (b, T) int32 absolute per-slot
+    query positions — row t attends key positions ``<= positions[:, t]``,
+    negative positions mark padding and yield zero rows.  ``k_scale``/
+    ``v_scale`` ((n_blocks, block_size) float32, one absmax scale per
+    cached token) dequantize quantized pools; None means unit scales.
+
+    Returns (b, T, h, d) in q.dtype.  impl: 'auto' (kernel on TPU, ref
+    otherwise) | 'kernel' | 'interpret' | 'ref'.
+    """
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return paged_chunk_attention_ref(q, k_pool, v_pool, block_tables,
+                                         positions, k_scale, v_scale)
+    b, T, h, d = q.shape
+    nb, bs, kvh = k_pool.shape[:3]
+    assert h % kvh == 0, (h, kvh)
+    group = h // kvh
+    R = T * group
+    Rp = -(-R // _SUBLANE) * _SUBLANE
+
+    # (b, T, h, d) -> (b, T, kvh, group, d) -> (b, kvh, T*group, d):
+    # row t*group + g of kv head kv is query head kv*group + g of token t
+    qg = q.reshape(b, T, kvh, group, d).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(b, kvh, R, d)
+    qpos = jnp.repeat(positions.astype(jnp.int32), group, axis=1)  # (b, R)
+    if Rp != R:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Rp - R), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, Rp - R)), constant_values=-1)
+    ones = jnp.ones((nb, bs, 1), jnp.float32)
+    ks = ones if k_scale is None else k_scale.astype(jnp.float32)[..., None]
+    vs = ones if v_scale is None else v_scale.astype(jnp.float32)[..., None]
+    maxpos = jnp.max(positions, axis=1).astype(jnp.int32)
+
+    o = paged_chunk_attention_kernel(
+        qg, qpos[:, :, None], k_pool, v_pool, ks, vs,
+        block_tables.astype(jnp.int32), maxpos,
+        interpret=impl == "interpret")
+    o = o[:, :, :R].reshape(b, kvh, T, group, d).transpose(0, 2, 1, 3, 4)
+    return o.reshape(b, T, h, d)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the paged chunk-attention kernel.
+
+This is also the masked (T, S) score path the serving stack used to run
+as its hot path (``models/attention.py``'s pre-PR-6 ``chunk_attention``)
+— it survives here as the off-TPU / interpret-parity reference while the
+Pallas kernel owns the TPU hot path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_chunk_attention_ref(q, k_pool, v_pool, block_tables, positions,
+                              k_scale=None, v_scale=None):
+    """q (b, T, h, d); k/v_pool (n_blocks, bs, kvh, d); block_tables
+    (b, nbmax) int32; positions (b, T) int32 -> (b, T, h, d).
+
+    Gathers each sequence's blocks in table order (logical position of
+    slot ``j`` entry ``o`` is ``j * bs + o``), dequantizes with the
+    optional per-entry ``k_scale``/``v_scale`` pools ((n_blocks, bs)
+    float32, one absmax scale per cached token), and runs a dense fp32
+    softmax where query row ``t`` attends every key position
+    ``<= positions[:, t]`` — the write-then-attend chunk contract: a
+    valid row always sees at least its own key.
+
+    **Padding-row semantics**: rows with ``positions < 0`` have *no*
+    valid keys and are returned as exact **zeros** — not NaN, not a
+    uniform-softmax average.  The kernel produces the same zeros
+    naturally (an all-masked row never accumulates, so its normalizer
+    stays 0 and the guarded divide yields 0); producing them here too is
+    what lets interpret-parity tests compare padded chunks bit-for-bit
+    instead of skipping garbage rows.
+    """
+    b, T, h, d = q.shape
+    bs, kvh = k_pool.shape[1], k_pool.shape[2]
+    group = h // kvh
+    # (b, nbmax, bs, kvh, d) -> (b, S, kvh, d), S = nbmax * bs
+    k = k_pool[block_tables].reshape(b, -1, kvh, d).astype(jnp.float32)
+    v = v_pool[block_tables].reshape(b, -1, kvh, d).astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[block_tables].reshape(b, -1)[:, :, None, None]
+        v = v * v_scale[block_tables].reshape(b, -1)[:, :, None, None]
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32), k) * (d ** -0.5)
+    kpos = jnp.arange(k.shape[1])
+    mask = kpos[None, None, :] <= positions[:, :, None]       # (b, T, S)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhts,bshd->bthd", w, v)
+    o = jnp.where((positions >= 0)[:, :, None, None], o, 0.0)
+    return o.astype(q.dtype)

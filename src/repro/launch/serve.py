@@ -42,6 +42,10 @@ def main(argv=None):
                     help="paged: sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="paged: top-k truncation (0 = full vocab)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=("bfloat16", "float8_e4m3", "int8"),
+                    help="paged: quantized KV block dtype (default: the "
+                         "model compute dtype, unquantized)")
     args = ap.parse_args(argv)
 
     from repro.configs.registry import get_arch, smoke_config
@@ -114,7 +118,8 @@ def _serve_paged(model, params, batch, args):
                            max_slots=args.batch,
                            prefill_chunk=args.prefill_chunk,
                            temperature=args.temperature,
-                           top_k=args.top_k, seed=args.seed)
+                           top_k=args.top_k, seed=args.seed,
+                           kv_dtype=args.kv_dtype)
     rids = [engine.submit(row, args.gen, arrival=i * args.stagger)
             for i, row in enumerate(tokens)]
     t0 = time.time()

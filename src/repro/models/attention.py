@@ -19,6 +19,48 @@ from repro.parallel.axes import shard_act
 
 NEG_INF = -1e30
 
+# Quantized KV pool dtypes (DESIGN.md §9).  Mirrors core/compression.py's
+# wire formats: e4m3 saturates at +-448 and overflowing casts go to NaN,
+# so values are clipped *before* the cast; int8 is blockwise-absmax with
+# round + clip (quantize_blockwise's scheme, absmax taken per cached
+# token instead of per flat 256-block).
+KV_DTYPES = {
+    "bfloat16": jnp.bfloat16,
+    "float8_e4m3": jnp.float8_e4m3fn,
+    "int8": jnp.int8,
+}
+_KV_QMAX = {jnp.dtype(jnp.float8_e4m3fn): 448.0, jnp.dtype(jnp.int8): 127.0}
+
+# Trace counter for the retired hot path: incremented every time the
+# dense masked (T, S) score fallback of ``chunk_attention`` is *traced*.
+# Engine tests assert it stays flat when the kernel path is routed
+# (attn_impl="kernel"/"interpret"), i.e. no dense score tensor is ever
+# staged on the paged serving path.
+CHUNK_SCORE_TRACES = 0
+
+
+def quantize_kv(x, dtype):
+    """Quantize K or V entries (..., kv, hd) -> (q, scale (...,) fp32).
+
+    One absmax scale per cached token (over its kv x hd values): decode
+    appends one token at a time, so per-token scales quantize once on
+    write and never re-touch neighbours — a per-physical-block scale
+    would force a read-modify-requantize of the whole block per append
+    and let stale garbage in recycled blocks inflate the absmax.
+    """
+    dt = jnp.dtype(dtype)
+    if dt not in _KV_QMAX:
+        return x.astype(dtype), jnp.ones(x.shape[:-2], jnp.float32)
+    qmax = _KV_QMAX[dt]
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=(-2, -1))
+    scale = jnp.maximum(absmax / qmax, 1e-12)
+    y = xf / scale[..., None, None]
+    if dt == jnp.dtype(jnp.int8):
+        y = jnp.round(y)
+    y = jnp.clip(y, -qmax, qmax)     # pre-cast clip: e4m3 overflow -> NaN
+    return y.astype(dtype), scale
+
 
 # ----------------------------- params -------------------------------------
 
@@ -209,7 +251,7 @@ def chunk_cache_update(cache_k, cache_v, k_new, v_new, positions):
     return ck, cv
 
 
-def chunk_attention(cfg, q, cache_k, cache_v, positions):
+def chunk_attention(cfg, q, cache_k, cache_v, positions, *, impl=None):
     """Chunk-of-T-tokens attention against a dense cache (T >= 1).
 
     q: (b, T, h, hd); cache_k/v: (b, S, kv, hd) **already containing
@@ -218,9 +260,31 @@ def chunk_attention(cfg, q, cache_k, cache_v, positions):
     every cache position ``<= `` its own absolute position, which is
     simultaneously today's decode (T=1, one valid key prefix), a
     mid-prompt prefill chunk, and — with a fresh cache — a whole
-    prompt.  Rows with no valid keys (padding) produce garbage, masked
-    out by the caller's last-token gather.
+    prompt.
+
+    ``impl`` (default ``cfg.attn_impl``) dispatches like
+    ``attention_core``: "kernel"/"interpret" (and "auto" on TPU) lower
+    to the fused ``paged_chunk_attention`` op by viewing the dense
+    cache as a one-block-per-sequence pool (n_blocks = b, block_size =
+    S, table = arange(b)) — zero-copy, and padding rows come back as
+    exact zeros.  "ref" (and "auto" off-TPU) keeps the masked (T, S)
+    jnp score path, whose padding rows produce garbage masked out by
+    the caller's last-token gather; tracing it bumps the module-level
+    ``CHUNK_SCORE_TRACES`` counter so tests can assert the dense score
+    tensor never appears on the kernel-routed serving path.
     """
+    if impl is None:
+        impl = getattr(cfg, "attn_impl", "auto")
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl != "ref":
+        from repro.kernels.paged_chunk_attention import paged_chunk_attention
+        b = q.shape[0]
+        tables = jnp.arange(b, dtype=jnp.int32)[:, None]
+        return paged_chunk_attention(q, cache_k, cache_v, tables, positions,
+                                     impl=impl)
+    global CHUNK_SCORE_TRACES
+    CHUNK_SCORE_TRACES += 1
     k = _broadcast_kv(cache_k, cfg.n_heads)
     v = _broadcast_kv(cache_v, cfg.n_heads)
     k = shard_act(k, "batch", "kv_seq", "heads", "head_dim")
@@ -239,47 +303,89 @@ def chunk_attention(cfg, q, cache_k, cache_v, positions):
 
 def paged_slot_index(block_tables, positions, block_size):
     """Flat pool index (``block_id * bs + offset``) where each slot's
-    token at ``positions`` (b,) lands — the one place the block-table
-    address arithmetic lives."""
-    blk = jnp.take_along_axis(block_tables,
-                              (positions // block_size)[:, None],
-                              axis=1)[:, 0]
-    return blk * block_size + positions % block_size
+    token at ``positions`` lands — the one place the block-table
+    address arithmetic lives.  positions (b,) or (b, T) int32; negative
+    positions (chunk padding) map to slot -1, which
+    ``paged_cache_update`` drops."""
+    pos = positions if positions.ndim == 2 else positions[:, None]
+    pw = jnp.where(pos >= 0, pos, 0)
+    blk = jnp.take_along_axis(block_tables, pw // block_size, axis=1)
+    slots = jnp.where(pos >= 0, blk * block_size + pw % block_size, -1)
+    return slots if positions.ndim == 2 else slots[:, 0]
 
 
-def paged_cache_update(k_pool, v_pool, k_new, v_new, slots):
-    """Scatter one new token per sequence into a block-paged pool.
+def paged_cache_update(k_pool, v_pool, k_new, v_new, slots,
+                       k_scale=None, v_scale=None):
+    """Scatter a chunk of new K/V into a block-paged pool.
 
-    k_pool/v_pool: (n_blocks, bs, kv, hd); k_new/v_new: (b, 1, kv, hd);
-    slots: (b,) int32 flat pool indices ``block_id * bs + offset``.  Idle
-    engine slots point at the reserved scratch block (see
-    ``repro.serving.paged_cache``), so duplicate indices only ever
+    k_pool/v_pool: (n_blocks, bs, kv, hd); k_new/v_new: (b, T, kv, hd);
+    slots: (b, T) (or legacy (b,) for T = 1) int32 flat pool indices
+    ``block_id * bs + offset``; negative slots (padding tokens) are
+    dropped.  Idle engine slots point at the reserved scratch block
+    (see ``repro.serving.paged_cache``), so duplicate indices only ever
     collide there.
+
+    Quantize-on-write: when ``k_scale``/``v_scale`` ((n_blocks, bs)
+    float32 per-token scale pools) are given, the new entries are
+    quantized to the pool dtype via ``quantize_kv`` and the scales are
+    scattered beside them — returns (k_pool, v_pool, k_scale, v_scale).
+    Without scales the entries are cast and (k_pool, v_pool) returned.
     """
     nb, bs, kvh, hd = k_pool.shape
+    s2 = slots if slots.ndim == 2 else slots[:, None]
+    sw = jnp.where(s2 >= 0, s2, nb * bs).reshape(-1)     # OOB -> dropped
     kf = k_pool.reshape(nb * bs, kvh, hd)
     vf = v_pool.reshape(nb * bs, kvh, hd)
-    kf = kf.at[slots].set(k_new[:, 0].astype(kf.dtype))
-    vf = vf.at[slots].set(v_new[:, 0].astype(vf.dtype))
-    return kf.reshape(nb, bs, kvh, hd), vf.reshape(nb, bs, kvh, hd)
+    kn = k_new.reshape(-1, kvh, hd)
+    vn = v_new.reshape(-1, kvh, hd)
+    if k_scale is not None:
+        kq, ks = quantize_kv(kn, k_pool.dtype)
+        vq, vs = quantize_kv(vn, v_pool.dtype)
+        kf = kf.at[sw].set(kq, mode="drop")
+        vf = vf.at[sw].set(vq, mode="drop")
+        ksp = k_scale.reshape(nb * bs).at[sw].set(ks, mode="drop")
+        vsp = v_scale.reshape(nb * bs).at[sw].set(vs, mode="drop")
+        return (kf.reshape(k_pool.shape), vf.reshape(v_pool.shape),
+                ksp.reshape(nb, bs), vsp.reshape(nb, bs))
+    kf = kf.at[sw].set(kn.astype(kf.dtype), mode="drop")
+    vf = vf.at[sw].set(vn.astype(vf.dtype), mode="drop")
+    return kf.reshape(k_pool.shape), vf.reshape(v_pool.shape)
 
 
-def paged_decode_attention(cfg, q, k_pool, v_pool, block_tables, lengths,
-                           *, impl=None):
-    """One-token attention against a block-paged pool (flash-decode).
+def paged_chunk_attn(cfg, q, k_pool, v_pool, block_tables, positions,
+                     *, impl=None, k_scale=None, v_scale=None):
+    """Chunk-of-T-tokens attention against a block-paged pool — the one
+    attention op of the paged serving path (prefill chunks, decode
+    ticks, speculative verify all lower here).
 
-    q: (b, 1, h, hd); k_pool/v_pool: (n_blocks, bs, kv, hd);
-    block_tables: (b, nbmax) int32; lengths: (b,) int32 counting valid
-    cache positions *including* the token just written.  ``impl``
-    (default ``cfg.attn_impl``) dispatches like ``attention_core``:
-    "auto" compiles the Pallas kernel on TPU and uses the jnp gather ref
-    elsewhere; "kernel"/"interpret"/"ref" force a path.
+    q: (b, T, h, hd); k_pool/v_pool: (n_blocks, bs, kv, hd), optionally
+    quantized with per-token ``k_scale``/``v_scale`` pools; block_tables
+    (b, nbmax) int32; positions (b, T) absolute per-slot query positions
+    **already written** to the pool (write-then-attend) — row t attends
+    key positions ``<= positions[:, t]``, negative = padding -> zero
+    rows.  ``impl`` (default ``cfg.attn_impl``) dispatches like
+    ``attention_core``: "auto" compiles the Pallas kernel on TPU and
+    uses the jnp gather ref elsewhere; "kernel"/"interpret"/"ref" force
+    a path.
     """
     if impl is None:
         impl = getattr(cfg, "attn_impl", "auto")
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
-    from repro.kernels.flash_decode import flash_decode
-    o = flash_decode(q[:, 0], k_pool, v_pool, block_tables, lengths,
-                     impl=impl)
-    return o[:, None].astype(q.dtype)
+    from repro.kernels.paged_chunk_attention import paged_chunk_attention
+    o = paged_chunk_attention(q, k_pool, v_pool, block_tables, positions,
+                              k_scale, v_scale, impl=impl)
+    return o.astype(q.dtype)
+
+
+def paged_decode_attention(cfg, q, k_pool, v_pool, block_tables, lengths,
+                           *, impl=None, k_scale=None, v_scale=None):
+    """One-token attention against a block-paged pool.
+
+    A T=1 view over ``paged_chunk_attn`` kept for the legacy
+    lengths-based signature: ``lengths`` (b,) counts valid cache
+    positions *including* the token just written, so the query's
+    absolute position is ``lengths - 1`` and "valid keys < lengths" is
+    exactly the chunk contract's ``<= position``.
+    """
+    return paged_chunk_attn(cfg, q, k_pool, v_pool, block_tables,
+                            (lengths - 1)[:, None], impl=impl,
+                            k_scale=k_scale, v_scale=v_scale)

@@ -41,7 +41,7 @@ from repro.models.common import (apply_norm, cross_entropy, norm_defs,
                                  sinusoidal_pe, sinusoidal_positions)
 from repro.models.params import init_tree, p, shape_tree
 from repro.models.transformer import (chunk_layer, dense_layer, layer_defs,
-                                      paged_decode_layer, stack_defs, _sub)
+                                      paged_chunk_layer, stack_defs, _sub)
 from repro.parallel.axes import shard_act
 
 WHISPER_DECODE_ENC_FRAMES = 1500
@@ -160,10 +160,13 @@ class BaseLM:
 
     def _paged_chunk_driver(self, params, state, tokens, positions,
                             step_token):
-        """Shared T-step scaffolding for the paged forward: embed token
-        t, run ``step_token(x, pos) -> x`` (which advances the pools /
-        recurrent carries in its closure), then gather per-slot
-        last-valid logits.  Returns (logits, lengths)."""
+        """Per-token scaffolding for paged forwards of families with a
+        carried recurrence (hybrid mamba states advance one token at a
+        time): embed token t, run ``step_token(x, pos) -> x`` (which
+        advances the pools / recurrent carries in its closure), then
+        gather per-slot last-valid logits.  Pure-attention families run
+        the whole chunk through one fused op instead (DecoderLM).
+        Returns (logits, lengths)."""
         T = positions.shape[1]
         per_step = [step_token(self._embed(params, tokens[:, t])[:, None, :],
                                positions[:, t])
@@ -360,48 +363,62 @@ class DecoderLM(BaseLM):
         return {**state, "k": ck, "v": cv}, logits
 
     def _forward_paged(self, params, state, tokens, positions):
-        """Chunk forward against the block-paged pool.  One token per
-        slot per inner step (the flash-decode kernel's shape); T > 1
-        chunks run the steps back to back."""
+        """Chunk forward against the block-paged pool: the whole (b, T)
+        chunk runs as **one** fused ``paged_chunk_attn`` per layer
+        (write-then-attend with per-slot position masking), so decode
+        ticks (T=1), prefill chunks, and speculative verify windows all
+        lower to the same op — no per-token inner loop, no dense (T, S)
+        score tensor.  Quantized pools ("k_scale"/"v_scale" in the
+        state) thread their per-token scale pools through the scan."""
         cfg = self.cfg
         tables = state["block_tables"]
-        kp, vp = state["k"], state["v"]
+        quant = "k_scale" in state
+        x = self._embed(params, tokens)
+        slots = attn.paged_slot_index(tables, positions, state["k"].shape[2])
+        xs = (params["layers"], state["k"], state["v"])
+        if quant:
+            xs = xs + (state["k_scale"], state["v_scale"])
 
-        def step_token(x, pos):
-            nonlocal kp, vp
-            slots = attn.paged_slot_index(tables, pos, kp.shape[2])
-            if self.is_moe:
-                def body(carry, inp):
-                    x, aux = carry
-                    lp, kp, vp = inp
-                    h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
-                    q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h,
-                                               positions=pos[:, None])
+        if self.is_moe:
+            def body(carry, inp):
+                x, aux = carry
+                lp, kp, vp = inp[:3]
+                ks, vs = inp[3:] if quant else (None, None)
+                h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
+                q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h,
+                                           positions=positions)
+                if quant:
+                    kp, vp, ks, vs = attn.paged_cache_update(
+                        kp, vp, k, v, slots, ks, vs)
+                else:
                     kp, vp = attn.paged_cache_update(kp, vp, k, v, slots)
-                    o = attn.paged_decode_attention(cfg, q, kp, vp,
-                                                    tables, pos + 1)
-                    x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
-                    h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
-                    y, a = moe_mod.apply_moe(cfg, _sub(lp, "moe_"), h,
-                                             group_size=self.moe_group,
-                                             dropless=True)
-                    return (x + y, aux + a), (kp, vp)
-                (x, _), (kp, vp) = jax.lax.scan(
-                    body, (x, jnp.zeros((), jnp.float32)),
-                    (params["layers"], kp, vp))
-            else:
-                def body(x, inp):
-                    lp, kp, vp = inp
-                    x, kp, vp = paged_decode_layer(cfg, lp, x, kp, vp,
-                                                   tables, pos, slots)
-                    return x, (kp, vp)
-                x, (kp, vp) = jax.lax.scan(body, x,
-                                           (params["layers"], kp, vp))
-            return x
+                o = attn.paged_chunk_attn(cfg, q, kp, vp, tables,
+                                          positions, k_scale=ks, v_scale=vs)
+                x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
+                h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
+                y, a = moe_mod.apply_moe(cfg, _sub(lp, "moe_"), h,
+                                         group_size=self.moe_group,
+                                         dropless=True)
+                ys = (kp, vp, ks, vs) if quant else (kp, vp)
+                return (x + y, aux + a), ys
+            (x, _), ys = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), xs)
+        else:
+            def body(x, inp):
+                lp, kp, vp = inp[:3]
+                ks, vs = inp[3:] if quant else (None, None)
+                x, kp, vp, ks, vs = paged_chunk_layer(
+                    cfg, lp, x, kp, vp, tables, positions, slots,
+                    k_scale=ks, v_scale=vs)
+                return x, ((kp, vp, ks, vs) if quant else (kp, vp))
+            x, ys = jax.lax.scan(body, x, xs)
 
-        logits, lengths = self._paged_chunk_driver(params, state, tokens,
-                                                   positions, step_token)
-        return {**state, "k": kp, "v": vp, "lengths": lengths}, logits
+        logits = self._gather_logits(params, x, positions)
+        lengths = jnp.max(positions, axis=1).astype(jnp.int32) + 1
+        new = {**state, "k": ys[0], "v": ys[1], "lengths": lengths}
+        if quant:
+            new["k_scale"], new["v_scale"] = ys[2], ys[3]
+        return new, logits
 
     def paged_decode_step(self, params, pools, block_tables, lengths,
                           tokens):
@@ -638,17 +655,21 @@ class ZambaLM(BaseLM):
         cfg = self.cfg
         tables = state["block_tables"]
         kp, vp, mamba = state["k"], state["v"], state["mamba"]
+        ks, vs = state.get("k_scale"), state.get("v_scale")
 
         def step_token(x, pos):
-            nonlocal kp, vp, mamba
-            x, mamba, kp, vp = zamba_mod.zamba_paged_step(
-                cfg, params, x, mamba, kp, vp, tables, pos)
+            nonlocal kp, vp, mamba, ks, vs
+            x, mamba, kp, vp, ks, vs = zamba_mod.zamba_paged_step(
+                cfg, params, x, mamba, kp, vp, tables, pos, ks, vs)
             return x
 
         logits, lengths = self._paged_chunk_driver(params, state, tokens,
                                                    positions, step_token)
-        return {**state, "mamba": mamba, "k": kp, "v": vp,
-                "lengths": lengths}, logits
+        new = {**state, "mamba": mamba, "k": kp, "v": vp,
+               "lengths": lengths}
+        if ks is not None:
+            new["k_scale"], new["v_scale"] = ks, vs
+        return new, logits
 
     @property
     def paged_kv_layers(self) -> int:

@@ -86,25 +86,35 @@ def dense_layer(cfg, lp, x, *, causal=True, positions=None,
     return shard_act(x, "batch", "seq", "embed")
 
 
-def paged_decode_layer(cfg, lp, x, k_pool, v_pool, block_tables, lengths,
-                       slots):
-    """One-token decode against a block-paged KV pool.
+def paged_chunk_layer(cfg, lp, x, k_pool, v_pool, block_tables, positions,
+                      slots, *, k_scale=None, v_scale=None):
+    """One layer of a chunk (T >= 1 tokens) against a block-paged pool.
 
-    x (b, 1, d); k_pool/v_pool (n_blocks, bs, kv, hd); ``lengths`` (b,)
-    is each sequence's cache occupancy before this token, so the new
-    token's RoPE position is ``lengths`` and it lands at flat pool index
-    ``slots`` (computed once by the caller, shared across layers).
+    x (b, T, d); k_pool/v_pool (n_blocks, bs, kv, hd); ``positions``
+    (b, T) is each token's absolute position (its RoPE position *and*
+    the key positions its query attends ``<=``; negative = padding),
+    landing at flat pool index ``slots`` (b, T) (computed once by the
+    caller, shared across layers).  T = 1 is a decode tick, larger T a
+    prefill chunk or speculative verify window — all one fused op.
+
+    Quantized pools thread their per-token ``k_scale``/``v_scale``
+    pools through the write and the attention; pass None for bf16.
     """
     h = apply_norm(cfg, _sub(lp, "ln1_"), x, name="norm")
     q, k, v = attn.project_qkv(cfg, _sub(lp, "attn_"), h,
-                               positions=lengths[:, None])
-    k_pool, v_pool = attn.paged_cache_update(k_pool, v_pool, k, v, slots)
-    o = attn.paged_decode_attention(cfg, q, k_pool, v_pool, block_tables,
-                                    lengths + 1)
+                               positions=positions)
+    if k_scale is not None:
+        k_pool, v_pool, k_scale, v_scale = attn.paged_cache_update(
+            k_pool, v_pool, k, v, slots, k_scale, v_scale)
+    else:
+        k_pool, v_pool = attn.paged_cache_update(k_pool, v_pool, k, v,
+                                                 slots)
+    o = attn.paged_chunk_attn(cfg, q, k_pool, v_pool, block_tables,
+                              positions, k_scale=k_scale, v_scale=v_scale)
     x = x + attn.out_proj(cfg, _sub(lp, "attn_"), o)
     h = apply_norm(cfg, _sub(lp, "ln2_"), x, name="norm")
     x = x + apply_mlp(cfg, lp, h, prefix="mlp_")
-    return x, k_pool, v_pool
+    return x, k_pool, v_pool, k_scale, v_scale
 
 
 def chunk_layer(cfg, lp, x, ck, cv, positions, *, fresh=False,

@@ -10,7 +10,7 @@ from repro.models import attention as attn
 from repro.models import mamba2
 from repro.models.params import p
 from repro.models.transformer import (chunk_layer, dense_layer, layer_defs,
-                                      paged_decode_layer, stack_defs)
+                                      paged_chunk_layer, stack_defs)
 
 
 def segments(cfg) -> list[int]:
@@ -128,11 +128,15 @@ def zamba_chunk(cfg, params, x, positions, state, *, fresh=False):
     return x, mamba_states, ks, vs
 
 
-def zamba_paged_step(cfg, params, x, mamba, kp, vp, block_tables, pos):
+def zamba_paged_step(cfg, params, x, mamba, kp, vp, block_tables, pos,
+                     k_scale=None, v_scale=None):
     """One token per slot against paged attention pools + per-slot mamba
     state.  x (b,1,d); kp/vp (I, n_blocks, bs, kv, hd); pos (b,) is each
-    slot's write position.  Returns (x, mamba', kp', vp')."""
-    slots = attn.paged_slot_index(block_tables, pos, kp.shape[2])
+    slot's write position.  Quantized pools carry per-token
+    ``k_scale``/``v_scale`` (I, n_blocks, bs) beside them.  Returns
+    (x, mamba', kp', vp', k_scale', v_scale')."""
+    pos2 = pos[:, None]
+    slots = attn.paged_slot_index(block_tables, pos2, kp.shape[2])
     new_mamba, inv, start = [], 0, 0
     for si, seg in enumerate(segments(cfg)):
         for li in range(start, start + seg):
@@ -143,13 +147,18 @@ def zamba_paged_step(cfg, params, x, mamba, kp, vp, block_tables, pos):
             new_mamba.append(st)
         start += seg
         if si < n_attn_invocations(cfg):
-            x, ki, vi = paged_decode_layer(cfg, params["shared"], x,
-                                           kp[inv], vp[inv], block_tables,
-                                           pos, slots)
+            ksi = None if k_scale is None else k_scale[inv]
+            vsi = None if v_scale is None else v_scale[inv]
+            x, ki, vi, ksi, vsi = paged_chunk_layer(
+                cfg, params["shared"], x, kp[inv], vp[inv], block_tables,
+                pos2, slots, k_scale=ksi, v_scale=vsi)
             kp = kp.at[inv].set(ki)
             vp = vp.at[inv].set(vi)
+            if k_scale is not None:
+                k_scale = k_scale.at[inv].set(ksi)
+                v_scale = v_scale.at[inv].set(vsi)
             inv += 1
-    return x, new_mamba, kp, vp
+    return x, new_mamba, kp, vp, k_scale, v_scale
 
 
 def zamba_mamba_init(cfg, batch: int, compute_dtype) -> list:

@@ -1,12 +1,15 @@
-"""Paged-KV serving: continuous batching + block-paged flash decode.
+"""Paged-KV serving: continuous batching + the unified paged
+chunk-attention op.
 
 The serving-side growth path for the paper's §VI-B4 story: a
-block-paged KV cache with refcounted prefix sharing
-(``paged_cache.PagedKVCache``), a continuous-batching engine with
-per-step admission/eviction and length-bucketed step functions
-(``engine.ServingEngine``), and — one level down — the fused Pallas
-flash-decode kernel (``repro.kernels.flash_decode``) that gathers
-blocks through the table during the online-softmax pass.
+block-paged KV cache with refcounted prefix sharing and optional
+fp8/int8 KV blocks (``paged_cache.PagedKVCache``), a
+continuous-batching engine with per-step admission/eviction and
+length-bucketed step functions (``engine.ServingEngine``), and — one
+level down — the fused Pallas paged chunk-attention kernel
+(``repro.kernels.paged_chunk_attention``, DESIGN.md §9) that gathers
+and dequantizes blocks through the table during the online-softmax
+pass, for prefill chunks, decode ticks, and speculative verify alike.
 
 ``serve_lib.BatchServer`` dispatches here when
 ``cfg.decode_impl == "paged"``; the dense lockstep path remains the

@@ -108,7 +108,8 @@ class ServingEngine:
                  block_size: int = 16, max_slots: int = 4,
                  pool_dtype: str = "bfloat16", share_prefixes: bool = True,
                  min_table_width: int = 2, prefill_chunk: int = 0,
-                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 kv_dtype: str | None = None):
         cfg = model.cfg
         if cfg.family not in _PAGED_FAMILIES:
             raise ValueError(
@@ -137,7 +138,7 @@ class ServingEngine:
         self.cache = PagedKVCache(
             layers=model.paged_kv_layers, n_blocks=n_blocks,
             block_size=block_size, kv_heads=cfg.n_kv_heads,
-            head_dim=cfg.head_dim, dtype=pool_dtype)
+            head_dim=cfg.head_dim, dtype=pool_dtype, kv_dtype=kv_dtype)
         # Non-KV per-slot sequence state (hybrid mamba); {} otherwise.
         self._extras = model.paged_state_extras(max_slots)
         self._extras_keys = tuple(self._extras)
@@ -483,10 +484,16 @@ class ServingEngine:
                  "block_tables": jnp.asarray(tables),
                  "lengths": jnp.asarray(lengths),
                  "rng": jnp.asarray(keys), **self._extras}
+        if self.cache.quantized:
+            state["k_scale"] = self.cache.k_scale
+            state["v_scale"] = self.cache.v_scale
         state, logits = self._step(self.params, state,
                                    jnp.asarray(tokens)[:, None],
                                    jnp.asarray(lengths)[:, None])
         self.cache.k, self.cache.v = state["k"], state["v"]
+        if self.cache.quantized:
+            self.cache.k_scale = state["k_scale"]
+            self.cache.v_scale = state["v_scale"]
         self._extras = {k: state[k] for k in self._extras_keys}
         # pick on device: ship (max_slots,) int32 to host, not the
         # (max_slots, vocab) logits; an all-greedy step (the default)

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.attention import KV_DTYPES, quantize_kv
 # One prefix-identity function across the serving stack: the paged index
 # and the 3FS context cache must agree on what "same prompt" means.
 from repro.serve_lib import _prefix_key
@@ -47,6 +48,7 @@ from repro.serve_lib import _prefix_key
 # in place instead of rewriting O(pool) HBM; CPU rejects donation with a
 # warning, so keep it off there.  Callers immediately rebind self.k/v.
 _DONATE = (0, 1) if jax.default_backend() in ("tpu", "gpu") else ()
+_DONATE_Q = (0, 1, 2, 3) if jax.default_backend() in ("tpu", "gpu") else ()
 
 
 @functools.partial(jax.jit, donate_argnums=_DONATE)
@@ -58,21 +60,66 @@ def _scatter_blocks(k_pool, v_pool, k, v, block_ids):
     return k_pool.at[:, block_ids].set(kb), v_pool.at[:, block_ids].set(vb)
 
 
+@functools.partial(jax.jit, donate_argnums=_DONATE_Q)
+def _scatter_blocks_quant(k_pool, v_pool, ks_pool, vs_pool, k, v, block_ids):
+    """Quantize-on-write for sub-bf16 pools: dense prefill K/V
+    (L, nblk*bs, kv, hd) is quantized per token entry (absmax over
+    kv x hd) and scattered with its scales beside it."""
+    L, nb, bs, kvh, hd = k_pool.shape
+    kq, ks = quantize_kv(k, k_pool.dtype)
+    vq, vs = quantize_kv(v, v_pool.dtype)
+    kb = kq.reshape(L, -1, bs, kvh, hd)
+    vb = vq.reshape(L, -1, bs, kvh, hd)
+    ksb = ks.reshape(L, -1, bs)
+    vsb = vs.reshape(L, -1, bs)
+    return (k_pool.at[:, block_ids].set(kb),
+            v_pool.at[:, block_ids].set(vb),
+            ks_pool.at[:, block_ids].set(ksb),
+            vs_pool.at[:, block_ids].set(vsb))
+
+
 @functools.partial(jax.jit, donate_argnums=_DONATE)
 def _copy_block(k_pool, v_pool, src, dst):
     return (k_pool.at[:, dst].set(k_pool[:, src]),
             v_pool.at[:, dst].set(v_pool[:, src]))
 
 
+@functools.partial(jax.jit, donate_argnums=_DONATE_Q)
+def _copy_block_quant(k_pool, v_pool, ks_pool, vs_pool, src, dst):
+    """COW copy carrying the per-token scale rows with the block — a
+    quantized block without its scales dequantizes to garbage, so the
+    two must never separate (the prefix-restore regression)."""
+    return (k_pool.at[:, dst].set(k_pool[:, src]),
+            v_pool.at[:, dst].set(v_pool[:, src]),
+            ks_pool.at[:, dst].set(ks_pool[:, src]),
+            vs_pool.at[:, dst].set(vs_pool[:, src]))
+
+
 class PagedKVCache:
     """Device block pools + host allocator/refcounts/prefix index."""
 
     def __init__(self, *, layers: int, n_blocks: int, block_size: int,
-                 kv_heads: int, head_dim: int, dtype: str = "bfloat16"):
+                 kv_heads: int, head_dim: int, dtype: str = "bfloat16",
+                 kv_dtype: str | None = None):
         assert n_blocks >= 2, "need at least scratch + 1 allocatable block"
+        # kv_dtype (one of models.attention.KV_DTYPES) takes precedence
+        # over dtype; sub-bf16 choices flip the cache into quantized mode
+        # where per-token absmax scales (L, n_blocks, bs) f32 live beside
+        # the pools and every write goes through quantize_kv.
+        pool_dtype = KV_DTYPES[kv_dtype] if kv_dtype is not None else dtype
+        self.quantized = jnp.dtype(pool_dtype) not in (
+            jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float32))
         shape = (layers, n_blocks, block_size, kv_heads, head_dim)
-        self.k = jnp.zeros(shape, dtype)
-        self.v = jnp.zeros(shape, dtype)
+        self.k = jnp.zeros(shape, pool_dtype)
+        self.v = jnp.zeros(shape, pool_dtype)
+        if self.quantized:
+            self.k_scale = jnp.ones((layers, n_blocks, block_size),
+                                    jnp.float32)
+            self.v_scale = jnp.ones((layers, n_blocks, block_size),
+                                    jnp.float32)
+        else:
+            self.k_scale = None
+            self.v_scale = None
         self.n_blocks = n_blocks
         self.block_size = block_size
         self.refcount = np.zeros(n_blocks, np.int64)
@@ -128,14 +175,24 @@ class PagedKVCache:
             k = jnp.pad(k, cfgpad)
             v = jnp.pad(v, cfgpad)
         ids = jnp.asarray(block_ids, jnp.int32)
-        self.k, self.v = _scatter_blocks(self.k, self.v, k, v, ids)
+        if self.quantized:
+            self.k, self.v, self.k_scale, self.v_scale = (
+                _scatter_blocks_quant(self.k, self.v,
+                                      self.k_scale, self.v_scale,
+                                      k, v, ids))
+        else:
+            self.k, self.v = _scatter_blocks(self.k, self.v, k, v, ids)
 
     def copy_block(self, src: int) -> int | None:
         """Copy-on-write: duplicate one block into a fresh allocation."""
         dst = self.alloc(1)
         if dst is None:
             return None
-        self.k, self.v = _copy_block(self.k, self.v, src, dst[0])
+        if self.quantized:
+            self.k, self.v, self.k_scale, self.v_scale = _copy_block_quant(
+                self.k, self.v, self.k_scale, self.v_scale, src, dst[0])
+        else:
+            self.k, self.v = _copy_block(self.k, self.v, src, dst[0])
         return dst[0]
 
     # --------------------------- prefix sharing ----------------------------

@@ -1,0 +1,146 @@
+"""Quantized KV blocks (fp8/int8 pools + per-token scales): quantize_kv
+error bounds, engine-level determinism, the prefix-restore scale-carry
+regression (DESIGN.md §9), and the flash_decode deprecation guard."""
+import dataclasses as dc
+import pathlib
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import KV_DTYPES, quantize_kv
+
+RNG = np.random.default_rng(11)
+
+
+# ------------------------------ quantize_kv --------------------------------
+
+
+@pytest.mark.parametrize("name,bound", [("float8_e4m3", 0.08),
+                                        ("int8", 0.02)])
+def test_quantize_kv_roundtrip_error(name, bound):
+    """Dequantized entries stay within the format's inherent error on
+    unit-normal data (e4m3 ~6e-2 from the 3-bit mantissa, int8 ~1.4e-2
+    — the DESIGN.md §9 numbers), and the scale layout is per token."""
+    x = jnp.asarray(RNG.standard_normal((6, 16, 4, 32)), jnp.float32)
+    q, scale = quantize_kv(x, KV_DTYPES[name])
+    assert q.dtype == jnp.dtype(KV_DTYPES[name])
+    assert scale.shape == x.shape[:-2] and scale.dtype == jnp.float32
+    back = q.astype(jnp.float32) * scale[..., None, None]
+    err = np.max(np.abs(np.asarray(back - x))) / np.max(np.abs(np.asarray(x)))
+    assert err <= bound, f"{name} relative error {err} > {bound}"
+
+
+def test_quantize_kv_bf16_passthrough():
+    x = jnp.asarray(RNG.standard_normal((3, 8, 2, 16)), jnp.float32)
+    q, scale = quantize_kv(x, jnp.bfloat16)
+    assert q.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(scale), 1.0)
+
+
+def test_quantize_kv_saturates_outliers():
+    """Values at the absmax must land on the format max, not overflow
+    (e4m3 overflow is NaN, not inf — the compression.py lesson)."""
+    x = jnp.zeros((1, 4, 2, 8), jnp.float32).at[0, 0, 0, 0].set(1e4)
+    for name in ("float8_e4m3", "int8"):
+        q, scale = quantize_kv(x, KV_DTYPES[name])
+        assert np.all(np.isfinite(np.asarray(q, np.float32)))
+
+
+# ----------------------------- quantized engine ----------------------------
+
+
+def _build():
+    from repro.configs.registry import smoke_config
+    from repro.models import build_model
+    cfg = dc.replace(smoke_config("codeqwen1.5-7b"), n_layers=2,
+                     compute_dtype="float32")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _build()
+
+
+def _run(model, params, prompts, gen=6, **kw):
+    from repro.serving import ServingEngine
+    eng = ServingEngine(model, params, n_blocks=64, block_size=16,
+                        max_slots=len(prompts), **kw)
+    rids = [eng.submit(p, gen) for p in prompts]
+    outs = eng.run()
+    return eng, np.stack([outs[r] for r in rids])
+
+
+@pytest.mark.parametrize("kv_dtype", ["float8_e4m3", "int8"])
+def test_quantized_engine_deterministic(setup, kv_dtype):
+    """Greedy decode with quantized pools is a function of (params,
+    prompt): two engines produce identical tokens."""
+    cfg, model, params = setup
+    prompts = [RNG.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (13, 21)]
+    eng, a = _run(model, params, prompts, kv_dtype=kv_dtype)
+    assert eng.cache.quantized
+    assert eng.cache.k.dtype == jnp.dtype(KV_DTYPES[kv_dtype])
+    assert eng.cache.k_scale.shape == eng.cache.k.shape[:3]
+    _, b = _run(model, params, prompts, kv_dtype=kv_dtype)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_prefix_restore_bit_identical_e4m3(setup):
+    """Prefix-cache restore must carry the per-token scales with the
+    shared/COW-copied blocks: a restored continuation is bit-identical
+    to a cold prefill of the same prompt.  (A restore that incref'd
+    blocks but dropped scale rows would dequantize the tail block with
+    unit scales and silently diverge.)"""
+    cfg, model, params = setup
+    prompt = RNG.integers(0, cfg.vocab_size, 21).astype(np.int32)  # COW tail
+    _, cold = _run(model, params, [prompt], gen=8, kv_dtype="float8_e4m3")
+
+    from repro.serving import ServingEngine
+    eng = ServingEngine(model, params, n_blocks=64, block_size=16,
+                        max_slots=2, kv_dtype="float8_e4m3")
+    r1 = eng.submit(prompt, 8)
+    first = eng.run()[r1]
+    r2 = eng.submit(prompt, 8)           # exact-prefix hit -> block restore
+    second = eng.run()[r2]
+    assert eng.cache.hits == 1
+    np.testing.assert_array_equal(cold[0], first)
+    np.testing.assert_array_equal(cold[0], second)
+
+
+def test_quantized_tokens_close_to_plain(setup):
+    """Quantization may legitimately flip near-tie argmaxes, but on a
+    short smoke trace the token streams should mostly agree — a gross
+    mismatch means scales are being dropped or misapplied."""
+    cfg, model, params = setup
+    prompts = [RNG.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (13, 29)]
+    _, plain = _run(model, params, prompts, gen=8)
+    _, quant = _run(model, params, prompts, gen=8, kv_dtype="float8_e4m3")
+    assert np.mean(plain == quant) >= 0.75
+
+
+# ---------------------------- deprecation guard ----------------------------
+
+
+def test_flash_decode_not_called_in_src():
+    """``flash_decode`` survives only as a T=1 shim over the unified
+    paged chunk-attention op: nothing under src/repro outside its own
+    package may call it (mirrors the PR 5 prefill/decode_step guard)."""
+    root = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+    pat = re.compile(r"\bflash_decode\b")
+    offenders = []
+    for path in root.rglob("*.py"):
+        if "kernels/flash_decode" in str(path.as_posix()):
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{path.relative_to(root)}:{lineno}: "
+                                 f"{line.strip()}")
+    assert not offenders, \
+        "deprecated flash_decode referenced outside its package:\n" + \
+        "\n".join(offenders)

@@ -1,0 +1,156 @@
+"""Unified paged chunk-attention kernel: interpret-mode parity vs the
+jnp gather oracle across chunk widths (decode T=1, speculative-verify
+mid widths, prefill prompt chunks), block sizes, GQA group sizes, and
+quantized KV pool dtypes (DESIGN.md §9), plus the padding-row zeros
+contract and the engine-level guarantee that the paged path never
+traces a dense (T, S) score tensor."""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.interpret
+
+RNG = np.random.default_rng(7)
+
+KV_JNP = {"bfloat16": jnp.bfloat16, "float8_e4m3": jnp.float8_e4m3fn,
+          "int8": jnp.int8}
+
+
+def _rand(shape, dtype="float32"):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32), dtype)
+
+
+def _pools(nb, bs, kvh, d, kv_dtype):
+    """Pools in the target dtype + per-token scales, via the same
+    quantize-on-write the cache uses — kernel and ref then dequantize
+    the identical bits, so parity is tight even for e4m3."""
+    from repro.models.attention import quantize_kv
+    kf = RNG.standard_normal((nb, bs, kvh, d)).astype(np.float32)
+    vf = RNG.standard_normal((nb, bs, kvh, d)).astype(np.float32)
+    if kv_dtype == "bfloat16":
+        return (jnp.asarray(kf, jnp.bfloat16), jnp.asarray(vf, jnp.bfloat16),
+                None, None)
+    kq, ks = quantize_kv(jnp.asarray(kf), KV_JNP[kv_dtype])
+    vq, vs = quantize_kv(jnp.asarray(vf), KV_JNP[kv_dtype])
+    return kq, vq, ks, vs
+
+
+# Curated cross: every axis value appears — T {1, 7, 16, 24=prompt},
+# block size {16, 64}, GQA group {1, 2, 4} — without the full product
+# (interpret mode pays per-case tracing).
+#        T, bs, h, kvh, d, nb, nbmax
+CASES = [
+    (1, 16, 4, 4, 32, 10, 3),      # decode tick, MHA
+    (1, 64, 8, 2, 32, 6, 2),       # decode tick, group 4, big blocks
+    (7, 16, 4, 2, 64, 12, 4),      # verify-width chunk, group 2
+    (7, 64, 4, 1, 32, 6, 2),       # verify-width chunk, group 4
+    (16, 16, 8, 4, 32, 12, 4),     # block-width chunk, group 2
+    (16, 64, 4, 4, 64, 6, 3),      # block-width chunk, MHA
+    (24, 16, 4, 2, 32, 8, 2),      # prompt-style prefill chunk
+]
+
+
+@pytest.mark.parametrize("kv_dtype", ["bfloat16", "float8_e4m3", "int8"])
+@pytest.mark.parametrize("case", CASES)
+def test_paged_chunk_parity(case, kv_dtype):
+    from repro.kernels.paged_chunk_attention import (
+        paged_chunk_attention, paged_chunk_attention_ref)
+    T, bs, h, kvh, d, nb, nbmax = case
+    b = 2
+    q = _rand((b, T, h, d))
+    kp, vp, ks, vs = _pools(nb, bs, kvh, d, kv_dtype)
+    # fragmented tables: physical ids permuted and shared across slots
+    bt = jnp.asarray(RNG.integers(0, nb, (b, nbmax)), jnp.int32)
+    # contiguous chunks at random offsets; one slot gets padding rows
+    starts = RNG.integers(0, nbmax * bs - T + 1, b)
+    pos = (starts[:, None] + np.arange(T)[None, :]).astype(np.int32)
+    if T > 1:
+        pos[0, -1] = -1                       # padding slot (PR 5 contract)
+    pos = jnp.asarray(pos)
+    out = paged_chunk_attention(q, kp, vp, bt, pos, k_scale=ks, v_scale=vs,
+                                impl="interpret")
+    ref = paged_chunk_attention_ref(q, kp, vp, bt, pos,
+                                    k_scale=ks, v_scale=vs)
+    tol = 1e-5 if kv_dtype == "bfloat16" else 1e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_padding_rows_are_zero():
+    """Negative-position rows must come out *exactly* zero from both the
+    kernel and the ref — the documented contract that keeps interpret
+    parity from comparing NaNs and lets callers mask by position."""
+    from repro.kernels.paged_chunk_attention import (
+        paged_chunk_attention, paged_chunk_attention_ref)
+    b, T, h, kvh, d, nb, bs, nbmax = 2, 5, 4, 2, 32, 8, 16, 2
+    q = _rand((b, T, h, d))
+    kp, vp, _, _ = _pools(nb, bs, kvh, d, "bfloat16")
+    bt = jnp.asarray(RNG.integers(0, nb, (b, nbmax)), jnp.int32)
+    pos = np.full((b, T), -1, np.int32)
+    pos[0, :3] = [0, 1, 2]                    # slot 0: 3 real + 2 pad rows
+    pos = jnp.asarray(pos)                    # slot 1: all padding
+    out = np.asarray(paged_chunk_attention(q, kp, vp, bt, pos,
+                                           impl="interpret"), np.float32)
+    ref = np.asarray(paged_chunk_attention_ref(q, kp, vp, bt, pos),
+                     np.float32)
+    assert np.all(np.isfinite(out)) and np.all(np.isfinite(ref))
+    np.testing.assert_array_equal(out[0, 3:], 0.0)
+    np.testing.assert_array_equal(out[1], 0.0)
+    np.testing.assert_array_equal(ref[0, 3:], 0.0)
+    np.testing.assert_array_equal(ref[1], 0.0)
+    np.testing.assert_allclose(out[0, :3], ref[0, :3], atol=1e-5, rtol=1e-5)
+
+
+def test_boundary_positions():
+    """Positions on exact block boundaries, position 0, and full-table
+    occupancy."""
+    from repro.kernels.paged_chunk_attention import (
+        paged_chunk_attention, paged_chunk_attention_ref)
+    b, T, h, kvh, d, nb, bs, nbmax = 4, 2, 4, 2, 32, 9, 16, 3
+    q = _rand((b, T, h, d))
+    kp, vp, _, _ = _pools(nb, bs, kvh, d, "bfloat16")
+    bt = jnp.asarray(RNG.integers(0, nb, (b, nbmax)), jnp.int32)
+    pos = jnp.asarray([[0, 1],                        # sequence start
+                       [bs - 2, bs - 1],              # ends on boundary
+                       [bs - 1, bs],                  # crosses boundary
+                       [nbmax * bs - 2, nbmax * bs - 1]],   # full table
+                      jnp.int32)
+    out = paged_chunk_attention(q, kp, vp, bt, pos, impl="interpret")
+    ref = paged_chunk_attention_ref(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_engine_paged_path_traces_no_dense_scores():
+    """With the kernel routed (attn_impl='interpret'), a full serving
+    trace — chunked prefill + decode ticks — must never trace the dense
+    masked (T, S) score fallback of ``chunk_attention`` on the *paged*
+    path.  The dense scratch prefill legitimately uses it; the counter
+    must stay flat across every paged decode step."""
+    from repro.configs.registry import smoke_config
+    from repro.models import attention as attn
+    from repro.models import build_model
+    from repro.serving import ServingEngine
+
+    cfg = dc.replace(smoke_config("codeqwen1.5-7b"), n_layers=2,
+                     compute_dtype="float32", attn_impl="interpret")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, n_blocks=32, block_size=16,
+                        max_slots=2, prefill_chunk=8)
+    prompts = [np.arange(13, dtype=np.int32) % 50,
+               np.arange(20, dtype=np.int32) % 50]
+    for p in prompts:
+        eng.submit(p, 4)
+    while eng._queue or eng._job is not None:
+        eng.step()                     # drain prefill (dense scratch path)
+    baseline = attn.CHUNK_SCORE_TRACES
+    while any(s is not None for s in eng._slots):
+        eng.step()                     # pure paged decode ticks
+    assert attn.CHUNK_SCORE_TRACES == baseline, \
+        "dense (T, S) score tensor traced on the paged decode path"
