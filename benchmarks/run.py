@@ -1,10 +1,16 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness: one module per paper table/figure + the roofline.
+Every suite prints ``name,us_per_call,derived`` CSV rows to stdout.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig7 fig9  # subset
   PYTHONPATH=src python -m benchmarks.run attn decode grad roofline \
-      fig7 fig8 fig9 ddp --smoke                     # CI drift check
+      fig7 fig8 fig9 ddp telemetry --smoke           # CI drift check
+  PYTHONPATH=src python -m benchmarks.run decode --json=results.json
+
+``--json[=PATH]`` additionally collects each suite's return value into
+one machine-readable JSON document (default ``BENCH_run.json``) —
+per-suite dicts under their suite name, errors as
+``{"ok": false, "error": ...}``.
 
 ``--smoke`` sets REPRO_BENCH_SMOKE=1 before any suite runs: the kernel
 suites (attn / decode / grad / ddp) drop to their reduced off-TPU shapes
@@ -26,12 +32,20 @@ def main() -> None:
     if "--smoke" in args:
         args = [a for a in args if a != "--smoke"]
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+    json_path = ""
+    for a in list(args):
+        if a == "--json":
+            json_path = "BENCH_run.json"
+            args.remove(a)
+        elif a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
+            args.remove(a)
 
     from benchmarks import (attn_bench, ddp_bench, decode_bench,
                             fig7_allreduce, fig8_weakscaling,
                             fig9_strongscaling, grad_bench, roofline,
                             table2_costperf, table3_network,
-                            table6_failures)
+                            table6_failures, telemetry_bench)
 
     suites = {
         "table2": table2_costperf.run,
@@ -45,21 +59,32 @@ def main() -> None:
         "decode": decode_bench.run,
         "grad": grad_bench.run,
         "ddp": ddp_bench.run,
+        "telemetry": telemetry_bench.run,
     }
 
     names = args or list(suites)
     print("name,us_per_call,derived")
     failures = 0
+    results = {}
     for n in names:
         try:
             out = suites[n]()
+            results[n] = out
             if isinstance(out, dict) and out.get("ok") is False:
                 failures += 1
         except Exception as e:  # keep the harness running
             print(f"{n}.ERROR,0,{type(e).__name__}:{e}")
+            results[n] = {"ok": False,
+                          "error": f"{type(e).__name__}: {e}"}
             failures += 1
     if failures:
         print(f"run.failures,0,{failures}")
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump({"suites": results, "failures": failures}, f,
+                      indent=2, default=str)
+        print(f"run.json,0,{json_path}")
     sys.exit(1 if failures else 0)
 
 

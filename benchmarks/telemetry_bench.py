@@ -1,0 +1,182 @@
+"""Telemetry overhead suite (DESIGN.md §10 budget: < 2 % step time).
+
+Two halves:
+
+  * micro: ns/op for the primitives — ``Counter.inc``,
+    ``Histogram.record``, and a ``span`` enter/exit under three regimes
+    (enabled without a writer, enabled with a ``TraceWriter``
+    installed, disabled → shared null span).
+  * engine: wall-clock per ``ServingEngine.step`` with telemetry fully
+    on (spans + Chrome-trace writer) vs ``set_enabled(False)``.  One
+    long-lived engine runs *paired adjacent steps* — one per regime,
+    order alternating — and the median of the pairwise deltas is the
+    overhead: adjacent pairing cancels slow machine drift, the median
+    discards scheduler outliers (raw A/B pass averages on a noisy
+    shared CPU swing ±10 %, two orders of magnitude above the true
+    span cost).  The JSON records ``overhead_pct`` vs the 2 % target.
+
+Emits CSV rows and writes ``BENCH_telemetry.json``.  Off-TPU the
+engine timings measure XLA CPU dispatch — the overhead *ratio* is the
+point, not the absolute step time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+
+OUT_PATH = os.environ.get("REPRO_BENCH_TELEMETRY", "BENCH_telemetry.json")
+OVERHEAD_TARGET_PCT = 2.0
+
+
+def _cases():
+    if jax.default_backend() == "tpu" and \
+            os.environ.get("REPRO_BENCH_SMOKE") != "1":
+        return dict(n_micro=200_000, batch=4, prompt=24, block=16,
+                    n_layers=2, pairs=200, warmup=20)
+    return dict(n_micro=50_000, batch=2, prompt=12, block=8,
+                n_layers=2, pairs=200, warmup=10)
+
+
+def _micro(n: int) -> dict:
+    from repro.telemetry import (Registry, TraceWriter, install_writer,
+                                 set_enabled, span, uninstall_writer)
+
+    reg = Registry("telemetry_bench")
+    c = reg.counter("bench.count")
+    h = reg.histogram("bench.lat_s")
+
+    t0 = time.perf_counter()
+    for _ in range(n):
+        c.inc()
+    counter_ns = (time.perf_counter() - t0) / n * 1e9
+
+    t0 = time.perf_counter()
+    for i in range(n):
+        h.record(1e-6 * (i % 1000 + 1))
+    record_ns = (time.perf_counter() - t0) / n * 1e9
+
+    n_span = max(n // 10, 1)           # spans read the clock twice
+
+    t0 = time.perf_counter()
+    for _ in range(n_span):
+        with span("bench.span"):
+            pass
+    span_ns = (time.perf_counter() - t0) / n_span * 1e9
+
+    writer = TraceWriter()
+    install_writer(writer)
+    try:
+        t0 = time.perf_counter()
+        for _ in range(n_span):
+            with span("bench.span"):
+                pass
+        span_writer_ns = (time.perf_counter() - t0) / n_span * 1e9
+    finally:
+        uninstall_writer()
+
+    set_enabled(False)
+    try:
+        t0 = time.perf_counter()
+        for _ in range(n):
+            with span("bench.span"):
+                pass
+        span_off_ns = (time.perf_counter() - t0) / n * 1e9
+    finally:
+        set_enabled(True)
+
+    out = {"counter_inc_ns": counter_ns, "histogram_record_ns": record_ns,
+           "span_ns": span_ns, "span_writer_ns": span_writer_ns,
+           "span_disabled_ns": span_off_ns}
+    for k, v in out.items():
+        emit(f"telemetry.micro.{k}", v / 1e3, f"{v:.0f}ns")
+    return out
+
+
+def _engine_overhead(c) -> dict:
+    import statistics
+
+    from repro.configs.registry import smoke_config
+    from repro.data.synthetic import batch_for_model
+    from repro.models import build_model
+    from repro.serving import ServingEngine
+    from repro.telemetry import (TraceWriter, install_writer, set_enabled,
+                                 uninstall_writer)
+
+    cfg = dataclasses.replace(smoke_config("codeqwen1.5-7b"),
+                              n_layers=c["n_layers"],
+                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    b, prompt, block = c["batch"], c["prompt"], c["block"]
+    budget = 2 * c["pairs"] + c["warmup"] + 40       # decode steps needed
+    batch = batch_for_model(cfg, "prefill", 0, b, prompt)
+    max_blocks = -(-(prompt + budget + 4) // block)
+    eng = ServingEngine(model, params, n_blocks=b * max_blocks + 1,
+                        block_size=block, max_slots=b,
+                        min_table_width=max_blocks)
+    for row in np.asarray(batch["tokens"]):
+        eng.submit(row, budget + 4)
+    eng.step()                                       # admit + compile
+
+    def one(enabled: bool) -> float:
+        set_enabled(enabled)
+        t0 = time.perf_counter()
+        eng.step()
+        return time.perf_counter() - t0
+
+    writer = TraceWriter()
+    install_writer(writer)
+    try:
+        for _ in range(c["warmup"]):
+            eng.step()
+        deltas, offs = [], []
+        for k in range(c["pairs"]):
+            if k % 2:
+                off = one(False)
+                on = one(True)
+            else:
+                on = one(True)
+                off = one(False)
+            deltas.append(on - off)
+            offs.append(off)
+        delta = statistics.median(deltas)
+        base = statistics.median(offs)
+    finally:
+        uninstall_writer()
+        set_enabled(True)
+
+    overhead_pct = delta / base * 100.0
+    emit("telemetry.engine.base", base * 1e6, "set_enabled(False)")
+    emit("telemetry.engine.overhead", delta * 1e6,
+         f"pct={overhead_pct:.2f}")
+    return {"us_per_step_disabled": base * 1e6,
+            "overhead_us_per_step": delta * 1e6,
+            "overhead_pct": overhead_pct,
+            "pairs": c["pairs"]}
+
+
+def run():
+    c = _cases()
+    micro = _micro(c["n_micro"])
+    engine = _engine_overhead(c)
+    ok = engine["overhead_pct"] < OVERHEAD_TARGET_PCT
+    data = {
+        "backend": jax.default_backend(),
+        "smoke": os.environ.get("REPRO_BENCH_SMOKE") == "1",
+        "micro_ns": micro,
+        "engine": engine,
+        "overhead_target_pct": OVERHEAD_TARGET_PCT,
+        "ok": ok,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(data, f, indent=2)
+    emit("telemetry.ok", 0, f"ok={ok} -> {OUT_PATH}")
+    return data

@@ -21,6 +21,8 @@ import time
 import jax
 import numpy as np
 
+from repro.telemetry import span
+
 
 class _LocalBackend:
     def __init__(self, root):
@@ -100,7 +102,8 @@ class CheckpointManager:
 
     def save(self, state, step: int, blocking: bool = True):
         """Snapshot to host, then write (async unless blocking)."""
-        host = jax.device_get(state)   # paper: async D2H before the write
+        with span("ckpt.d2h", step=step):
+            host = jax.device_get(state)   # paper: async D2H before write
         if blocking:
             self._write(host, step)
             return
@@ -120,6 +123,10 @@ class CheckpointManager:
         return False
 
     def _write(self, host_state, step: int):
+        with span("ckpt.write", step=step):
+            self._write_inner(host_state, step)
+
+    def _write_inner(self, host_state, step: int):
         leaves = jax.tree_util.tree_flatten_with_path(host_state)[0]
         index = {"step": step, "tensors": {}, "chunks": []}
         buf, buf_used, chunk_id = [], 0, 0
@@ -183,6 +190,10 @@ class CheckpointManager:
         return json.loads(self.backend.read("latest.json"))["step"]
 
     def restore(self, step: int, template):
+        with span("ckpt.restore", step=step):
+            return self._restore_inner(step, template)
+
+    def _restore_inner(self, step: int, template):
         index = json.loads(self.backend.read(f"step_{step}/index.json"))
         chunks = {i: self.backend.read(name)      # 3FS batch read
                   for i, name in enumerate(index["chunks"])}

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.telemetry import span
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -46,6 +48,12 @@ def main(argv=None):
                     choices=("bfloat16", "float8_e4m3", "int8"),
                     help="paged: quantized KV block dtype (default: the "
                          "model compute dtype, unquantized)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the telemetry snapshot after the run "
+                         "(paged: engine.request_metrics() percentiles)")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace JSON (chrome://tracing / "
+                         "Perfetto) of the run to this path")
     args = ap.parse_args(argv)
 
     from repro.configs.registry import get_arch, smoke_config
@@ -62,9 +70,21 @@ def main(argv=None):
     batch = batch_for_model(cfg, "prefill", 0, args.batch, args.prompt_len,
                             args.seed)
     batch = {k: jnp.asarray(v) for k, v in batch.items()}
-    if impl == "paged":
-        return _serve_paged(model, params, batch, args)
-    return _serve_dense(model, params, batch, args)
+    writer = None
+    if args.trace:
+        from repro.telemetry import TraceWriter, install_writer
+        writer = TraceWriter()
+        install_writer(writer)
+    try:
+        if impl == "paged":
+            return _serve_paged(model, params, batch, args)
+        return _serve_dense(model, params, batch, args)
+    finally:
+        if writer is not None:
+            from repro.telemetry import uninstall_writer
+            uninstall_writer()
+            writer.write(args.trace)
+            print(f"trace written to {args.trace}")
 
 
 def _serve_dense(model, params, batch, args):
@@ -75,12 +95,13 @@ def _serve_dense(model, params, batch, args):
     tokens, positions, embeds = model.prompt_inputs(params, batch)
     b, s = positions.shape
     t0 = time.time()
-    state = jax.jit(model.init_seq_state,
-                    static_argnames=("max_len", "batch_size", "dtype"))(
-        params, max_len=s + args.gen, batch=batch, batch_size=b)
-    state, logits = fwd(params, state, tokens, positions,
-                        embeds=embeds, fresh=True)
-    jax.block_until_ready(logits)
+    with span("serve.dense_prefill", batch=b, prompt_len=s):
+        state = jax.jit(model.init_seq_state,
+                        static_argnames=("max_len", "batch_size", "dtype"))(
+            params, max_len=s + args.gen, batch=batch, batch_size=b)
+        state, logits = fwd(params, state, tokens, positions,
+                            embeds=embeds, fresh=True)
+        jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
     toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -88,11 +109,18 @@ def _serve_dense(model, params, batch, args):
     t0 = time.time()
     for i in range(args.gen - 1):
         pos = jnp.full((b, 1), s + i, jnp.int32)
-        state, logits = fwd(params, state, toks[:, None], pos)
-        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(np.asarray(toks))
+        with span("serve.dense_decode", step=i):
+            state, logits = fwd(params, state, toks[:, None], pos)
+            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(np.asarray(toks))
     jax.block_until_ready(logits)
     t_decode = time.time() - t0
+
+    if args.metrics:
+        import json
+        from repro.telemetry import get_registry
+        print("telemetry snapshot:")
+        print(json.dumps(get_registry().snapshot(), indent=2, default=str))
 
     gen = np.stack(out, axis=1)
     print(f"prefill {args.prompt_len} toks x{args.batch}: {t_prefill:.3f}s")
@@ -136,6 +164,10 @@ def _serve_paged(model, params, batch, args):
           f"{t_total / max(engine.step_count, 1) * 1e3:.1f} ms/step "
           f"amortized)")
     print(f"engine stats: {engine.stats}")
+    if args.metrics:
+        import json
+        print("request metrics:")
+        print(json.dumps(engine.request_metrics(), indent=2, default=str))
     gen = np.stack([outs[r] for r in rids])
     print("sample generations:")
     for row in gen[: min(4, args.batch)]:

@@ -117,6 +117,9 @@ def main(argv=None):
     ap.add_argument("--pp-schedule", choices=("gpipe", "1f1b"),
                     default="1f1b")
     ap.add_argument("--pp-microbatches", type=int, default=4)
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace JSON (chrome://tracing / "
+                         "Perfetto) of the run to this path")
     args = ap.parse_args(argv)
     if args.ddp:
         warnings.warn("--ddp is deprecated; use --parallel ddp",
@@ -142,6 +145,12 @@ def main(argv=None):
                              and len(jax.devices()) % d == 0)
     mesh = build_mesh(args.parallel, args.pp_stages)
     plan = build_plan(args)
+
+    writer = None
+    if args.trace:
+        from repro.telemetry import TraceWriter, install_writer
+        writer = TraceWriter()
+        install_writer(writer)
 
     rng = jax.random.PRNGKey(args.seed)
     params = model.init(rng)
@@ -183,6 +192,11 @@ def main(argv=None):
         loader.stop()
         if manager:
             manager.wait()
+        if writer is not None:
+            from repro.telemetry import uninstall_writer
+            uninstall_writer()
+            writer.write(args.trace)
+            print(f"trace written to {args.trace}")
 
     if manager:
         manager.save(state, min(args.steps, step), blocking=True)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.models.params import p
 from repro.models.common import apply_rope, rope_freqs
 from repro.parallel.axes import shard_act
+from repro.telemetry import get_registry
 
 NEG_INF = -1e30
 
@@ -35,8 +36,16 @@ _KV_QMAX = {jnp.dtype(jnp.float8_e4m3fn): 448.0, jnp.dtype(jnp.int8): 127.0}
 # dense masked (T, S) score fallback of ``chunk_attention`` is *traced*.
 # Engine tests assert it stays flat when the kernel path is routed
 # (attn_impl="kernel"/"interpret"), i.e. no dense score tensor is ever
-# staged on the paged serving path.
-CHUNK_SCORE_TRACES = 0
+# staged on the paged serving path.  Lives in the default telemetry
+# registry; ``CHUNK_SCORE_TRACES`` remains readable as a module
+# attribute (PEP 562) for back-compat with existing assertions.
+_chunk_score_traces = get_registry().counter("attention.chunk_score_traces")
+
+
+def __getattr__(name):
+    if name == "CHUNK_SCORE_TRACES":
+        return _chunk_score_traces.value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def quantize_kv(x, dtype):
@@ -283,8 +292,7 @@ def chunk_attention(cfg, q, cache_k, cache_v, positions, *, impl=None):
         tables = jnp.arange(b, dtype=jnp.int32)[:, None]
         return paged_chunk_attention(q, cache_k, cache_v, tables, positions,
                                      impl=impl)
-    global CHUNK_SCORE_TRACES
-    CHUNK_SCORE_TRACES += 1
+    _chunk_score_traces.inc()
     k = _broadcast_kv(cache_k, cfg.n_heads)
     v = _broadcast_kv(cache_v, cfg.n_heads)
     k = shard_act(k, "batch", "kv_seq", "heads", "head_dim")

@@ -138,32 +138,43 @@ def make_train_step(plan: ParallelPlan, model, optimizer, mesh, *,
     gradient buckets from it.  ``donate=True`` donates the state argument
     on every executor (drivers should pass it; test harnesses that reuse
     a state across steps must not).
+
+    The returned callable is wrapped in a host-side ``train.step``
+    telemetry span *outside* the jit boundary (dispatch wall time, mode
+    attr) — every executor gets the same trace shape for free.
     """
     import jax
+
+    from repro.telemetry import span
 
     if plan.mode == "gspmd":
         from repro import train_lib
         step = train_lib.make_train_step(model, optimizer,
                                          plan.gspmd_config(), mesh)
-        return jax.jit(step, donate_argnums=(0,) if donate else ())
-
-    if loss_fn is None:
-        loss_fn = lambda p, b: model.loss(p, b)  # noqa: E731
-
-    if plan.mode == "ddp":
+        step = jax.jit(step, donate_argnums=(0,) if donate else ())
+    elif plan.mode == "ddp":
         from repro.core import ddp
+        if loss_fn is None:
+            loss_fn = lambda p, b: model.loss(p, b)  # noqa: E731
         if params_template is None:
             raise ValueError("mode='ddp' needs params_template to plan "
                              "gradient buckets")
         step, _ = ddp.make_ddp_train_step(loss_fn, optimizer, mesh, plan,
                                           params_template=params_template,
                                           donate=donate)
-        return step
+    else:
+        from repro.parallel import pp
+        step = pp.make_pp_train_step(model, optimizer, mesh, plan,
+                                     params_template=params_template,
+                                     donate=donate)
 
-    from repro.parallel import pp
-    return pp.make_pp_train_step(model, optimizer, mesh, plan,
-                                 params_template=params_template,
-                                 donate=donate)
+    mode = plan.mode
+
+    def traced_step(state, batch):
+        with span("train.step", mode=mode):
+            return step(state, batch)
+
+    return traced_step
 
 
 def init_state(plan: ParallelPlan, optimizer, params, mesh):

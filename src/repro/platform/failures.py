@@ -61,6 +61,13 @@ class FailureKind(str, enum.Enum):
     IB_FLASH = "ib_flash_cut"
 
 
+# The one event-stream taxonomy (DESIGN.md §10): every record the
+# platform emits through ``repro.telemetry.EventLog`` uses one of these
+# ``kind``s, so the Table-6 failure accounting, the FT runner's report,
+# and any persisted JSONL log classify identically.
+EVENT_KINDS = ("failure", "restore", "rescale", "straggler", "ckpt")
+
+
 @dataclasses.dataclass(frozen=True)
 class FailureEvent:
     t_hours: float
@@ -68,6 +75,14 @@ class FailureEvent:
     cls: str
     action: str
     fatal: bool
+
+    def to_event(self) -> dict:
+        """Fields for ``EventLog.emit("failure", **ev.to_event())`` —
+        the sampled Poisson stream and the FT runner's injected
+        failures land in the same schema."""
+        return {"t_hours": self.t_hours, "node": self.node,
+                "cls": self.cls, "action": self.action,
+                "fatal": self.fatal}
 
 
 class FailureModel:

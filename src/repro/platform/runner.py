@@ -8,16 +8,25 @@ Also straggler mitigation: per-step wall times are tracked with a rolling
 median; a step slower than ``straggler_factor`` x median raises a
 straggler event — the platform's answer is to swap the node (simulated by
 the caller's injector) and keep going, never to silently stall the gang.
+
+Every discrete platform event — ``failure`` / ``restore`` / ``rescale``
+/ ``straggler`` / ``ckpt`` — goes through **one**
+``repro.telemetry.EventLog`` (the runner's ``event_log``): the
+``RunReport.events`` list, the ``on_event`` callback, and the
+persistable JSONL stream all see the *same* record, so the Table-6
+failure taxonomy has a single source of truth.  Step timing breaks down
+into ``runner.fetch`` / ``runner.step`` / ``runner.block`` spans plus
+``train.{fetch,step}_s`` histograms in the default registry.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional
 
 import numpy as np
 
 from repro.platform.failures import SimulatedHardwareFailure
+from repro.telemetry import EventLog, get_registry, now, span
 
 
 @dataclasses.dataclass
@@ -39,13 +48,16 @@ class FTRunner:
     fetch_batch(step) -> batch
     ckpt_manager: repro.ckpt.CheckpointManager
     injector: optional FailureInjector (check(step) raises)
+    event_log: optional telemetry.EventLog (one is created per runner
+      otherwise); ``runner.event_log.write(path)`` persists the stream.
     """
 
     def __init__(self, make_step, fetch_batch, ckpt_manager, state,
                  *, world_size: int, min_world: int = 1,
                  ckpt_every: int = 10, injector=None,
                  straggler_factor: float = 4.0,
-                 on_event: Optional[Callable] = None):
+                 on_event: Optional[Callable] = None,
+                 event_log: Optional[EventLog] = None):
         self.make_step = make_step
         self.fetch_batch = fetch_batch
         self.ckpt = ckpt_manager
@@ -56,27 +68,43 @@ class FTRunner:
         self.injector = injector
         self.straggler_factor = straggler_factor
         self.on_event = on_event or (lambda *a: None)
+        self.event_log = event_log or EventLog()
 
     def _log(self, report, kind, **kw):
-        report.events.append({"kind": kind, **kw})
+        # single emit point: the report, the callback, and the JSONL
+        # stream share one record — they cannot drift apart
+        rec = self.event_log.emit(kind, **kw)
+        report.events.append(rec)
         self.on_event(kind, kw)
 
     def run(self, total_steps: int, start_step: int = 0) -> RunReport:
+        reg = get_registry()
+        h_step = reg.histogram("train.step_s")
+        h_fetch = reg.histogram("train.fetch_s")
         report = RunReport()
         step_fn = self.make_step(self.world)
+        with span("ckpt.save", step=start_step, blocking=True):
+            self.ckpt.save(self.state, start_step, blocking=True)
+        self._log(report, "ckpt", step=start_step, blocking=True)
         step = start_step
-        last_ckpt_step = start_step
-        self.ckpt.save(self.state, step, blocking=True)
 
         while step < total_steps:
             try:
                 if self.injector is not None:
                     self.injector.check(step)
-                batch = self.fetch_batch(step)
-                t0 = time.perf_counter()
-                self.state, metrics = step_fn(self.state, batch)
-                _block(metrics)
-                dt = time.perf_counter() - t0
+                t0 = now()
+                with span("runner.fetch", step=step):
+                    batch = self.fetch_batch(step)
+                t1 = now()
+                h_fetch.record(t1 - t0)
+                # step = dispatch, block = device sync: together they are
+                # the wall step time the straggler detector watches
+                with span("runner.step", step=step):
+                    self.state, metrics = step_fn(self.state, batch)
+                with span("runner.block", step=step):
+                    _block(metrics)
+                dt = now() - t1
+                h_step.record(dt)
                 report.step_times.append(dt)
                 # --- straggler detection ---
                 hist = report.step_times[-20:]
@@ -89,20 +117,24 @@ class FTRunner:
                 step += 1
                 report.steps_done += 1
                 if self.ckpt_every and step % self.ckpt_every == 0:
-                    self.ckpt.save(self.state, step, blocking=False)
-                    last_ckpt_step = step
+                    with span("ckpt.save", step=step, blocking=False):
+                        self.ckpt.save(self.state, step, blocking=False)
+                    self._log(report, "ckpt", step=step, blocking=False)
             except SimulatedHardwareFailure as e:
                 report.failures += 1
                 self._log(report, "failure", step=step, cls=e.cls,
                           action=e.action, fatal=e.fatal)
                 # disaster recovery: restore last checkpoint
                 self.ckpt.wait()
-                restored = self.ckpt.restore_latest(self.state)
+                with span("ckpt.restore", step=step):
+                    restored = self.ckpt.restore_latest(self.state)
                 if restored is None:
                     raise
                 self.state, ckstep = restored
                 report.lost_steps += max(step - ckstep, 0)
                 report.restores += 1
+                self._log(report, "restore", step=step, ckpt_step=ckstep,
+                          lost_steps=max(step - ckstep, 0))
                 step = ckstep
                 # elastic: fatal failure removes a node; shrink the gang
                 if e.fatal and self.world > self.min_world:
@@ -112,7 +144,9 @@ class FTRunner:
                 step_fn = self.make_step(self.world)
 
         self.ckpt.wait()
-        self.ckpt.save(self.state, step, blocking=True)
+        with span("ckpt.save", step=step, blocking=True):
+            self.ckpt.save(self.state, step, blocking=True)
+        self._log(report, "ckpt", step=step, blocking=True)
         return report
 
 

@@ -13,11 +13,12 @@ from __future__ import annotations
 import dataclasses
 import os
 import tempfile
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.telemetry import now, span
 
 
 @dataclasses.dataclass
@@ -50,10 +51,10 @@ class Validator:
     def check_cpu_memory_bandwidth(self) -> CheckResult:
         n = self.mem_mb * 1024 * 1024 // 8
         a = np.ones(n, np.float64)
-        t0 = time.perf_counter()
+        t0 = now()
         for _ in range(3):
             b = a * 1.0000001
-        dt = time.perf_counter() - t0
+        dt = now() - t0
         gbps = 3 * 2 * n * 8 / dt / 1e9
         return CheckResult("cpu_mem_bandwidth", gbps > 0.5, gbps, "GB/s")
 
@@ -72,9 +73,9 @@ class Validator:
         rng = np.random.default_rng(0)
         a = rng.standard_normal((n, n)).astype(np.float32)
         b = rng.standard_normal((n, n)).astype(np.float32)
-        t0 = time.perf_counter()
+        t0 = now()
         c = np.asarray(jnp.dot(a, b))
-        dt = time.perf_counter() - t0
+        dt = now() - t0
         ref = a.astype(np.float64) @ b.astype(np.float64)
         err = float(np.max(np.abs(c - ref)) / (np.abs(ref).max() + 1e-9))
         gflops = 2 * n ** 3 / dt / 1e9
@@ -100,15 +101,15 @@ class Validator:
     def check_storage(self, root: str | None = None) -> CheckResult:
         data = os.urandom(self.storage_mb * 1024 * 1024)
         with tempfile.NamedTemporaryFile(dir=root, delete=True) as f:
-            t0 = time.perf_counter()
+            t0 = now()
             f.write(data)
             f.flush()
             os.fsync(f.fileno())
-            t_w = time.perf_counter() - t0
+            t_w = now() - t0
             f.seek(0)
-            t0 = time.perf_counter()
+            t0 = now()
             back = f.read()
-            t_r = time.perf_counter() - t0
+            t_r = now() - t0
         ok = back == data and t_w > 0
         mbps = self.storage_mb / max(t_w, 1e-9)
         return CheckResult("storage_bandwidth", ok, mbps, "MB/s write",
@@ -117,14 +118,19 @@ class Validator:
     # -- suite --
 
     def run_all(self, storage_root: str | None = None) -> list[CheckResult]:
-        return [
-            self.check_devices(),
-            self.check_cpu_memory_bandwidth(),
-            self.check_device_memory(),
-            self.check_gemm(),
-            self.check_allreduce(),
-            self.check_storage(storage_root),
+        checks = [
+            (self.check_devices, ()),
+            (self.check_cpu_memory_bandwidth, ()),
+            (self.check_device_memory, ()),
+            (self.check_gemm, ()),
+            (self.check_allreduce, ()),
+            (self.check_storage, (storage_root,)),
         ]
+        out = []
+        for fn, args in checks:
+            with span(f"validator.{fn.__name__}"):
+                out.append(fn(*args))
+        return out
 
     def node_healthy(self, storage_root: str | None = None) -> bool:
         return all(c.ok for c in self.run_all(storage_root))

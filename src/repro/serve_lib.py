@@ -23,6 +23,8 @@ import ml_dtypes
 import msgpack
 import numpy as np
 
+from repro.telemetry import Registry, now, span
+
 
 def _prefix_key(tokens: np.ndarray) -> str:
     h = hashlib.sha256(np.ascontiguousarray(tokens, np.int32).tobytes())
@@ -152,10 +154,26 @@ class BatchServer:
             getattr(model, "cfg", None), "decode_impl", "dense")
         self._engine = None
         self._engine_kwargs = engine_kwargs or {}
+        self.metrics = Registry("batch_server")
+        self._c_batches = self.metrics.counter("batch_server.batches")
+        self._h_serve = self.metrics.histogram("batch_server.serve_s")
         self._init = jax.jit(
             model.init_seq_state,
             static_argnames=("max_len", "batch_size", "dtype"))
         self._forward = jax.jit(model.forward, static_argnames=("fresh",))
+
+    @property
+    def stats(self) -> dict:
+        """One merged snapshot: server-level counters + (when the paged
+        path has run) the engine's registry-backed stats — the ad-hoc
+        per-call info-dict merge, behind one accessor."""
+        s = {"batches": self._c_batches.value,
+             "serve_s": self._h_serve.snapshot(),
+             "hit_rate": self.ctx.hit_rate if self.ctx else 0.0}
+        if self._engine is not None:
+            s.update(self._engine.stats)
+            s["hit_rate"] = self._engine.cache.hit_rate
+        return s
 
     def _serve_paged(self, batch: dict, gen: int):
         from repro.serving import ServingEngine
@@ -166,9 +184,7 @@ class BatchServer:
         rids = [self._engine.submit(row, gen)
                 for row in np.asarray(batch["tokens"])]
         outs = self._engine.run()
-        info = {"hit_rate": self._engine.cache.hit_rate,
-                **self._engine.stats}
-        return np.stack([outs[r] for r in rids]), info
+        return np.stack([outs[r] for r in rids]), self.stats
 
     def _prefill_state(self, batch: dict, gen: int):
         """One fresh whole-prompt chunk; capacity covers prompt + gen."""
@@ -184,6 +200,14 @@ class BatchServer:
     def serve(self, batch: dict, gen: int = 16):
         """batch: model-format prefill inputs. Returns (tokens (b, gen),
         info)."""
+        self._c_batches.inc()
+        t0 = now()
+        with span("batch_server.serve", impl=self.decode_impl, gen=gen):
+            out = self._serve(batch, gen)
+        self._h_serve.record(now() - t0)
+        return out
+
+    def _serve(self, batch: dict, gen: int):
         if self.decode_impl == "paged":
             return self._serve_paged(batch, gen)
         tokens_np = np.asarray(batch["tokens"])

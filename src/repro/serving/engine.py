@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.paged_cache import PagedKVCache
+from repro.telemetry import Registry, now, span
 
 _PAGED_FAMILIES = ("dense", "moe", "hybrid")
 
@@ -74,6 +75,14 @@ class Request:
     slot: int = -1
     admitted_at: int = -1
     status: str = "queued"             # queued | prefilling | running | done
+    # -- telemetry (host wall clock; recorded at completion, not drain) --
+    t_submit: float | None = None      # submit() call
+    t_admit: float | None = None       # first admission attempt starts
+    t_first: float | None = None       # first token exists (TTFT endpoint)
+    t_last: float | None = None        # previous token (TPOT interval base)
+    n_evictions: int = 0
+    tpot_sum: float = 0.0              # per-token decode intervals
+    tpot_n: int = 0
 
     @property
     def done(self) -> bool:
@@ -143,19 +152,29 @@ class ServingEngine:
         self._extras = model.paged_state_extras(max_slots)
         self._extras_keys = tuple(self._extras)
 
-        # Trace counters: each jit cache miss re-traces the wrapped fn,
-        # so these count compiled variants (the O(log) assertions).
-        self.prefill_traces = 0
-        self.decode_traces = 0
+        # Per-engine metrics registry (standalone instance: concurrent
+        # engines must not share counters).  Trace counters live here:
+        # each jit cache miss re-traces the wrapped fn, so they count
+        # compiled variants (the O(log) assertions); request latency
+        # histograms (TTFT / per-token TPOT / queue wait) are recorded
+        # at request completion in step(), *before* run() clears _done.
+        self.metrics = Registry("engine")
+        self._c_prefill_traces = self.metrics.counter("engine.prefill_traces")
+        self._c_decode_traces = self.metrics.counter("engine.decode_traces")
+        self._c_evictions = self.metrics.counter("engine.evictions")
+        self._c_completed = self.metrics.counter("engine.requests_completed")
+        self._h_ttft = self.metrics.histogram("engine.ttft_s")
+        self._h_tpot = self.metrics.histogram("engine.tpot_s")
+        self._h_queue = self.metrics.histogram("engine.queue_wait_s")
 
         def _chunk_fn(params, state, tokens, positions, fresh):
-            self.prefill_traces += 1
+            self._c_prefill_traces.inc()
             return model.forward(params, state, tokens, positions,
                                  fresh=fresh)
         self._chunk = jax.jit(_chunk_fn, static_argnames=("fresh",))
 
         def _decode_fn(params, state, tokens, positions):
-            self.decode_traces += 1
+            self._c_decode_traces.inc()
             return model.forward(params, state, tokens, positions)
         # Donate the paged state where donation works (accelerators):
         # the step updates one token per slot, so without buffer
@@ -193,7 +212,24 @@ class ServingEngine:
         self._next_rid = 0
         self._admission_seq = 0    # monotone: exact FIFO eviction priority
         self.step_count = 0
-        self.evictions = 0
+        # Per-request completion records ({rid, ttft_s, ...}); bounded so
+        # a long-lived server doesn't retain every historical request.
+        self._request_log: list[dict] = []
+        self._request_log_cap = 10_000
+
+    # compat accessors over the registry-backed counters (pre-telemetry
+    # these were plain ints mutated in place)
+    @property
+    def prefill_traces(self) -> int:
+        return self._c_prefill_traces.value
+
+    @property
+    def decode_traces(self) -> int:
+        return self._c_decode_traces.value
+
+    @property
+    def evictions(self) -> int:
+        return self._c_evictions.value
 
     # ------------------------------- intake --------------------------------
 
@@ -206,7 +242,7 @@ class ServingEngine:
                       else temperature,
                       top_k=self.top_k if top_k is None else top_k,
                       seed=self.seed if seed is None else seed,
-                      rid=self._next_rid)
+                      rid=self._next_rid, t_submit=now())
         self._next_rid += 1
         self._queue.append(req)
         return req.rid
@@ -298,9 +334,13 @@ class ServingEngine:
 
     def _advance_job(self, job: _PrefillJob) -> None:
         toks, pos = job.chunks[job.next]
-        job.state, job.logits = self._chunk(
-            self.params, job.state, jnp.asarray(toks), jnp.asarray(pos),
-            job.next == 0)
+        # host wall time at the jit boundary: dispatch, not device sync —
+        # blocking here would serialize the prefill/decode interleave
+        with span("engine.prefill_chunk", rid=job.req.rid,
+                  chunk=job.next, width=toks.shape[1]):
+            job.state, job.logits = self._chunk(
+                self.params, job.state, jnp.asarray(toks), jnp.asarray(pos),
+                job.next == 0)
         job.next += 1
 
     def _finish_job(self, job: _PrefillJob) -> None:
@@ -323,9 +363,14 @@ class ServingEngine:
         req.blocks = blocks
         req.length = length
         req.tokens = [first]
+        tnow = now()
+        if req.t_first is None:   # survives eviction replay: TTFT is the
+            req.t_first = tnow    # *first* time the first token existed
+        req.t_last = tnow
         if req.done:        # max_new_tokens == 1: the prefill was enough
             self.cache.free(blocks)
             req.blocks, req.status = [], "done"
+            self._record_request(req)
             self._done[req.rid] = req
             return
         req.slot = self._slots.index(None)
@@ -338,6 +383,8 @@ class ServingEngine:
         self._slots[req.slot] = req
 
     def _start(self, req: Request) -> bool:
+        if req.t_admit is None:   # queue wait ends at first admission try
+            req.t_admit = now()
         restored = None
         if self.share_prefixes and req.greedy:
             restored = self.cache.lookup_prefix(req.prompt)
@@ -385,7 +432,8 @@ class ServingEngine:
         self.cache.free(job.blocks)
         req.status, req.arrival = "queued", self.step_count
         self._queue.insert(0, req)
-        self.evictions += 1
+        req.n_evictions += 1
+        self._c_evictions.inc()
 
     def _evict_for_space(self, needy: Request) -> bool:
         """Pool exhausted mid-decode: preempt the *youngest* claimant —
@@ -423,7 +471,8 @@ class ServingEngine:
                 req.slot, req.status = -1, "queued"
                 req.arrival = self.step_count
                 self._queue.insert(0, req)
-                self.evictions += 1
+                req.n_evictions += 1
+                self._c_evictions.inc()
                 return
         raise KeyError(f"request {rid} is not running")
 
@@ -487,9 +536,11 @@ class ServingEngine:
         if self.cache.quantized:
             state["k_scale"] = self.cache.k_scale
             state["v_scale"] = self.cache.v_scale
-        state, logits = self._step(self.params, state,
-                                   jnp.asarray(tokens)[:, None],
-                                   jnp.asarray(lengths)[:, None])
+        with span("engine.decode_tick", step=self.step_count,
+                  active=len(active)):
+            state, logits = self._step(self.params, state,
+                                       jnp.asarray(tokens)[:, None],
+                                       jnp.asarray(lengths)[:, None])
         self.cache.k, self.cache.v = state["k"], state["v"]
         if self.cache.quantized:
             self.cache.k_scale = state["k_scale"]
@@ -507,14 +558,26 @@ class ServingEngine:
                 jnp.asarray(temps), jnp.asarray(topks)), np.int32)
 
         produced = 0
+        tnow = now()      # one clock read for the whole batched tick
         for r in active:
             r.length += 1
             r.tokens.append(int(next_toks[r.slot]))
             produced += 1
+            if r.t_last is not None:
+                # per-token TPOT: interval since this request's previous
+                # token (includes eviction-replay gaps — what the user saw)
+                dt = tnow - r.t_last
+                self._h_tpot.record(dt)
+                r.tpot_sum += dt
+                r.tpot_n += 1
+            r.t_last = tnow
             if r.done:
                 self._slots[r.slot] = None
                 self.cache.free(r.blocks)
                 r.slot, r.status = -1, "done"
+                # telemetry is captured *here*, at completion — run()
+                # clears _done, so drain-time recording would lose it
+                self._record_request(r)
                 self._done[r.rid] = r
         self.step_count += 1
         return produced
@@ -536,11 +599,56 @@ class ServingEngine:
         return out              # every historical request
 
 
+    # ------------------------------ telemetry ------------------------------
+
+    def _record_request(self, req: Request) -> None:
+        """Fold a finished request into the latency histograms and the
+        bounded per-request log.  Called once, at completion."""
+        self._c_completed.inc()
+        ttft = queue_wait = None
+        if req.t_submit is not None and req.t_first is not None:
+            ttft = req.t_first - req.t_submit
+            self._h_ttft.record(ttft)
+        if req.t_submit is not None and req.t_admit is not None:
+            queue_wait = req.t_admit - req.t_submit
+            self._h_queue.record(queue_wait)
+        if len(self._request_log) < self._request_log_cap:
+            self._request_log.append({
+                "rid": req.rid, "prompt_len": len(req.prompt),
+                "n_tokens": len(req.tokens), "ttft_s": ttft,
+                "queue_wait_s": queue_wait,
+                "tpot_mean_s": (req.tpot_sum / req.tpot_n
+                                if req.tpot_n else None),
+                "evictions": req.n_evictions,
+            })
+
+    def request_metrics(self) -> dict:
+        """Per-request latency percentiles over every *completed* request
+        (recorded at completion time — surviving ``run()``'s drain).
+
+        TTFT = submit -> first token exists; TPOT = interval between a
+        request's consecutive tokens (per token, not per request);
+        queue_wait = submit -> first admission attempt.  All seconds.
+        """
+        def dist(h):
+            return {"count": h.count, "mean_s": h.mean,
+                    "p50_s": h.percentile(50), "p95_s": h.percentile(95),
+                    "p99_s": h.percentile(99)}
+        return {
+            "completed": self._c_completed.value,
+            "evictions": self._c_evictions.value,
+            "ttft": dist(self._h_ttft),
+            "tpot": dist(self._h_tpot),
+            "queue_wait": dist(self._h_queue),
+            "requests": list(self._request_log),
+        }
+
     @property
     def stats(self) -> dict:
         return {
             "steps": self.step_count,
             "evictions": self.evictions,
+            "requests_completed": self._c_completed.value,
             "prefix_hit_rate": self.cache.hit_rate,
             "free_blocks": self.cache.num_free,
             "prefill_traces": self.prefill_traces,

@@ -1,0 +1,22 @@
+"""Dependency-free metrics + tracing substrate (DESIGN.md §10).
+
+  * ``registry`` — typed Counter / Gauge / Histogram in named
+    registries; exact p50/p95/p99 export, reset-for-tests.
+  * ``trace`` — nestable host-side ``span``s at jit boundaries,
+    Chrome-trace (catapult) JSON via ``TraceWriter``, and the
+    structured ``EventLog`` the platform's failure taxonomy rides on.
+
+``now()`` is the sanctioned monotonic clock: the CI guard lane keeps
+``time.perf_counter`` out of every other module under ``src/``.
+"""
+from repro.telemetry.registry import (Counter, Gauge, Histogram, Registry,
+                                      get_registry)
+from repro.telemetry.trace import (EventLog, Span, TraceWriter, enabled,
+                                   get_writer, install_writer, now,
+                                   set_enabled, span, uninstall_writer)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "get_registry",
+    "EventLog", "Span", "TraceWriter", "enabled", "get_writer",
+    "install_writer", "now", "set_enabled", "span", "uninstall_writer",
+]

@@ -24,6 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
 from repro.models.params import shape_tree, spec_tree
 from repro.parallel.axes import Resolver, use_resolver
+from repro.telemetry import get_registry
 
 
 # ----------------------------- spec plumbing -------------------------------
@@ -93,7 +94,13 @@ def make_train_step(model, optimizer, pcfg: ParallelConfig, mesh):
         loss, metrics = model.loss(params, mb)
         return loss, metrics
 
+    # Trace counter (same discipline as the serving engine's): this body
+    # runs only when jit re-traces, so the counter counts compiled
+    # variants — the telemetry tests assert instrumentation adds none.
+    c_traces = get_registry().counter("train.step_traces")
+
     def train_step(state, batch):
+        c_traces.inc()
         with use_resolver(resolver):
             M = pcfg.microbatch
             params = state["params"]
@@ -159,8 +166,10 @@ def make_serve_step(model, pcfg: ParallelConfig, mesh):
     """One chunk of the chunk-oriented serving API: decode is T=1,
     chunked prefill is T=chunk — the same step lowers both."""
     resolver = Resolver(mesh, pcfg)
+    c_traces = get_registry().counter("serve.step_traces")
 
     def serve_step(params, state, tokens, positions):
+        c_traces.inc()
         with use_resolver(resolver):
             return model.forward(params, state, tokens, positions)
 

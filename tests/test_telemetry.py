@@ -1,0 +1,298 @@
+"""Telemetry layer (DESIGN.md §10): registry exactness, span/trace
+schema, event-log routing, per-request engine percentiles, and the
+zero-extra-jit-traces + one-clock guards."""
+import dataclasses as dc
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.data.synthetic import batch_for_model
+from repro.models import build_model
+from repro.serving import ServingEngine
+from repro.telemetry import (Counter, EventLog, Gauge, Histogram, Registry,
+                             TraceWriter, get_writer, install_writer,
+                             set_enabled, span, uninstall_writer)
+
+
+@pytest.fixture(autouse=True)
+def _clean_telemetry():
+    """Spans/writers are process globals — leave them as found."""
+    yield
+    uninstall_writer()
+    set_enabled(True)
+
+
+def _build(arch="codeqwen1.5-7b", **over):
+    cfg = dc.replace(smoke_config(arch), n_layers=2,
+                     compute_dtype="float32", **over)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ------------------------------ registry -----------------------------------
+
+
+def test_histogram_percentiles_exact_vs_numpy():
+    rng = np.random.default_rng(0)
+    vals = rng.lognormal(mean=-6, sigma=1.5, size=3000)
+    h = Histogram("t_s")
+    for v in vals:
+        h.record(v)
+    for q in (0, 10, 50, 95, 99, 100):
+        assert h.percentile(q) == pytest.approx(
+            float(np.percentile(vals, q)), rel=1e-9)
+    assert h.count == len(vals)
+    assert h.mean == pytest.approx(float(vals.mean()), rel=1e-9)
+
+
+def test_histogram_bucket_fallback_bounded_error():
+    rng = np.random.default_rng(1)
+    vals = rng.lognormal(mean=-4, sigma=1.0, size=4000)
+    h = Histogram("t_s", max_samples=16)      # force the CDF-walk path
+    for v in vals:
+        h.record(v)
+    assert h.count > len(h._samples)
+    for q in (50, 95, 99):
+        # geometric-mean interpolation: error bounded by sqrt(growth)-1
+        assert h.percentile(q) == pytest.approx(
+            float(np.percentile(vals, q)), rel=0.2)
+    assert h.percentile(0) <= h.percentile(50) <= h.percentile(99)
+
+
+def test_counter_gauge_and_type_mismatch():
+    reg = Registry("t_mismatch")
+    c = reg.counter("a.count")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    g = reg.gauge("a.level")
+    g.set(2.5)
+    assert g.value == 2.5
+    assert reg.counter("a.count") is c       # get-or-create
+    with pytest.raises(TypeError):
+        reg.histogram("a.count")
+    snap = reg.snapshot()
+    assert snap["a.count"] == 5 and snap["a.level"] == 2.5
+
+
+def test_registry_singletons_and_in_place_reset():
+    a1, a2 = Registry.get("t_shared"), Registry.get("t_shared")
+    assert a1 is a2
+    assert Registry("t_shared") is not a1     # standalone constructor
+    c = a1.counter("n")
+    h = a1.histogram("lat_s")
+    c.inc(3)
+    h.record(0.5)
+    a1.reset()
+    # the *objects* survive the reset — held references keep working
+    assert a2.counter("n") is c and c.value == 0
+    assert h.count == 0
+    c.inc()
+    assert a2.snapshot()["n"] == 1
+
+
+# ------------------------------ spans + traces ------------------------------
+
+
+def test_span_nesting_and_exception_safety():
+    w = TraceWriter()
+    install_writer(w)
+    with span("outer", step=1):
+        with span("inner"):
+            pass
+    with pytest.raises(ValueError):
+        with span("boom"):
+            raise ValueError("x")
+    names = [e["name"] for e in w.events]
+    assert names == ["inner", "outer", "boom"]   # exit order
+    inner, outer, boom = w.events
+    # nesting: the inner interval is contained in the outer one
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+    assert outer["args"] == {"step": 1}
+    assert boom["args"]["error"] == "ValueError"
+    # span histograms land in the default registry
+    assert Registry.get().histogram("span.outer").count >= 1
+
+
+def test_disabled_spans_are_shared_null_and_writer_silent():
+    w = TraceWriter()
+    install_writer(w)
+    set_enabled(False)
+    s1, s2 = span("a"), span("b", x=1)
+    assert s1 is s2                       # one shared null object
+    with s1:
+        pass
+    assert w.events == []
+    set_enabled(True)
+    assert span("a") is not span("a")
+
+
+def test_chrome_trace_schema_roundtrip(tmp_path):
+    w = TraceWriter()
+    install_writer(w)
+    log = EventLog()
+    with span("phase.work", k=2):
+        log.emit("failure", node=3, cls="sw_xid43")
+    path = w.write(str(tmp_path / "trace.json"))
+    doc = json.loads(pathlib.Path(path).read_text())
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    evs = doc["traceEvents"]
+    assert evs[0]["ph"] == "M" and evs[0]["name"] == "process_name"
+    xs = [e for e in evs if e["ph"] == "X"]
+    inst = [e for e in evs if e["ph"] == "i"]
+    assert len(xs) == 1 and len(inst) == 1
+    for e in xs:
+        assert {"name", "ph", "ts", "dur", "pid", "tid"} <= set(e)
+        assert e["dur"] >= 0 and e["ts"] >= 0
+    assert inst[0]["name"] == "failure" and inst[0]["s"] == "t"
+    # the instant falls inside the enclosing span
+    x = xs[0]
+    assert x["ts"] <= inst[0]["ts"] <= x["ts"] + x["dur"]
+
+
+def test_event_log_jsonl_roundtrip(tmp_path):
+    log = EventLog()
+    r1 = log.emit("ckpt", step=10, blocking=False)
+    r2 = log.emit("straggler", step=11, dt=2.0)
+    assert r1["kind"] == "ckpt" and r2["t"] >= r1["t"] >= 0
+    path = log.write(str(tmp_path / "events.jsonl"))
+    lines = pathlib.Path(path).read_text().splitlines()
+    assert [json.loads(ln) for ln in lines] == log.events
+
+
+def test_one_clock_guard_mirrors_ci():
+    """`telemetry.now` is the only sanctioned time.perf_counter in src/
+    (spans must be nullable by set_enabled(False))."""
+    src = pathlib.Path(__file__).resolve().parent.parent / "src"
+    offenders = [
+        str(p.relative_to(src))
+        for p in src.rglob("*.py")
+        if "repro/telemetry" not in p.as_posix()
+        and "time.perf_counter" in p.read_text()
+    ]
+    assert not offenders, f"raw perf_counter outside telemetry: {offenders}"
+
+
+# ------------------------------ engine metrics ------------------------------
+
+
+def _run_staggered(model, cfg, params, *, gen=6, stagger=2):
+    prompts = np.asarray(
+        batch_for_model(cfg, "prefill", 0, 3, 18)["tokens"], np.int32)
+    eng = ServingEngine(model, params, n_blocks=24, block_size=16,
+                        max_slots=3)
+    rids = [eng.submit(row, gen, arrival=i * stagger)
+            for i, row in enumerate(prompts)]
+    outs = eng.run()
+    return eng, rids, outs
+
+
+def test_engine_request_metrics_staggered_arrivals():
+    cfg, model, params = _build()
+    eng, rids, outs = _run_staggered(model, cfg, params)
+    m = eng.request_metrics()
+    assert m["completed"] == len(rids)
+    for key in ("ttft", "tpot", "queue_wait"):
+        d = m[key]
+        assert d["count"] > 0
+        assert 0 <= d["p50_s"] <= d["p95_s"] <= d["p99_s"]
+        assert d["mean_s"] > 0
+    assert m["ttft"]["count"] == len(rids)
+    assert m["tpot"]["count"] == sum(len(t) - 1 for t in outs.values())
+    recs = m["requests"]
+    assert len(recs) == len(rids)
+    for r in recs:
+        assert r["ttft_s"] is not None and r["queue_wait_s"] is not None
+        assert r["n_tokens"] >= 1
+    # metrics survive run()'s drain (which clears _done) — satellite 1
+    assert eng._done == {} and m["completed"] == len(rids)
+    assert eng.stats["requests_completed"] == len(rids)
+
+
+def test_engine_zero_extra_jit_traces_from_telemetry():
+    """Telemetry fully on (spans + writer) must not change what gets
+    compiled: trace counters are incremented at jit trace time."""
+    cfg, model, params = _build()
+
+    install_writer(TraceWriter())
+    eng_on, _, _ = _run_staggered(model, cfg, params)
+    on = (eng_on.prefill_traces, eng_on.decode_traces)
+    uninstall_writer()
+
+    set_enabled(False)
+    eng_off, _, _ = _run_staggered(model, cfg, params)
+    off = (eng_off.prefill_traces, eng_off.decode_traces)
+    set_enabled(True)
+
+    assert on == off
+    assert get_writer() is None
+
+
+# ------------------------------ FT runner routing ---------------------------
+
+
+def test_ftrunner_routes_every_event_through_one_log(tmp_path):
+    from repro.ckpt import CheckpointManager
+    from repro.platform.failures import EVENT_KINDS, FailureInjector
+    from repro.platform.runner import FTRunner
+
+    def make_step(world):
+        def step_fn(state, batch):
+            s = {"x": state["x"] + np.float32(world)}
+            return s, {"loss": np.float32(1.0)}
+        return step_fn
+
+    seen = []
+    runner = FTRunner(
+        make_step, lambda step: None,
+        CheckpointManager(str(tmp_path / "ckpt")),
+        {"x": np.float32(0)},
+        world_size=2, min_world=1, ckpt_every=2,
+        injector=FailureInjector({3: "uncorrectable"}),
+        on_event=lambda kind, kw: seen.append(kind))
+    report = runner.run(6)
+
+    assert report.failures == 1 and report.restores == 1
+    assert report.rescales == 1
+    # single source of truth: the report holds the *same* records the
+    # runner's EventLog does — the two views cannot drift
+    assert report.events == runner.event_log.events
+    assert all(any(r is e for e in runner.event_log.events)
+               for r in report.events)
+    kinds = [e["kind"] for e in report.events]
+    assert set(kinds) <= set(EVENT_KINDS)
+    assert {"ckpt", "failure", "restore", "rescale"} <= set(kinds)
+    assert seen == kinds                      # on_event saw each emit once
+    # the stream persists as JSONL
+    path = runner.event_log.write(str(tmp_path / "events.jsonl"))
+    lines = pathlib.Path(path).read_text().splitlines()
+    assert [json.loads(ln)["kind"] for ln in lines] == kinds
+
+
+# ------------------------------ launcher system -----------------------------
+
+
+def test_serve_launcher_trace_flag_writes_chrome_json(tmp_path):
+    from repro.launch import serve
+
+    out = tmp_path / "serve_trace.json"
+    serve.main(["--arch", "codeqwen1.5-7b", "--smoke",
+                "--decode-impl", "paged", "--batch", "2",
+                "--prompt-len", "12", "--gen", "4",
+                "--trace", str(out)])
+    doc = json.loads(out.read_text())
+    evs = doc["traceEvents"]
+    assert evs[0]["ph"] == "M"
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert any(e["name"] == "engine.decode_tick" for e in xs)
+    assert any(e["name"] == "engine.prefill_chunk" for e in xs)
+    for e in xs:
+        assert {"name", "ph", "ts", "dur", "pid", "tid"} <= set(e)
+        assert e["dur"] >= 0
+    assert get_writer() is None               # launcher uninstalls
