@@ -44,7 +44,7 @@ def main() -> None:
     from benchmarks import (attn_bench, ddp_bench, decode_bench,
                             fig7_allreduce, fig8_weakscaling,
                             fig9_strongscaling, grad_bench, roofline,
-                            table2_costperf, table3_network,
+                            serving_bench, table2_costperf, table3_network,
                             table6_failures, telemetry_bench)
 
     suites = {
@@ -60,6 +60,7 @@ def main() -> None:
         "grad": grad_bench.run,
         "ddp": ddp_bench.run,
         "telemetry": telemetry_bench.run,
+        "serving": serving_bench.run,
     }
 
     names = args or list(suites)

@@ -1,0 +1,193 @@
+"""Serving suite: disaggregated ServingCluster vs a monolithic engine
+under a Poisson arrival process with mixed request lengths.
+
+One synthetic open-loop workload (exponential interarrivals mapped to
+engine-step arrivals, prompt lengths drawn from a small mixture, gen
+lengths clipped-geometric) is replayed twice: once into a single
+``ServingEngine`` (monolithic: prefill and decode share one pool and
+one batch), once into a ``ServingCluster`` (M prefill + N decode
+replicas behind the SLO-aware router, per-request SeqState handoff).
+Per topology the suite reports TTFT/TPOT p50/p95/p99 over completed
+requests plus *goodput under SLO* — the fraction of requests whose
+TTFT and mean TPOT both land inside the router's targets, the metric
+disaggregation exists to move (arXiv:2505.09343).  Emits CSV rows and
+writes ``BENCH_serving.json``.
+
+Off-TPU the paged attention runs the jnp gather ref and the absolute
+latencies measure XLA CPU; the smoke shapes exist to catch API drift,
+not to assert perf.  The JSON records backend + topology so consumers
+can tell runs apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+
+OUT_PATH = os.environ.get("REPRO_BENCH_SERVING", "BENCH_serving.json")
+
+
+def _cases():
+    if jax.default_backend() == "tpu" and \
+            os.environ.get("REPRO_BENCH_SMOKE") != "1":
+        return dict(n_requests=48, prefill_replicas=2, decode_replicas=2,
+                    prompt_choices=(64, 128, 256), gen_mean=24, gen_max=48,
+                    mean_interarrival=2.0, block=32, max_slots=8,
+                    n_layers=4, slo_ttft_ms=2_000.0, slo_tpot_ms=200.0)
+    # Smoke / CPU: tiny trace, generous SLOs (CPU latencies are seconds).
+    return dict(n_requests=8, prefill_replicas=1, decode_replicas=1,
+                prompt_choices=(10, 18, 26), gen_mean=4, gen_max=6,
+                mean_interarrival=2.0, block=16, max_slots=4,
+                n_layers=2, slo_ttft_ms=60_000.0, slo_tpot_ms=10_000.0)
+
+
+def _workload(cfg, c, seed=0):
+    """Poisson arrivals + mixed lengths, deterministic under ``seed``.
+
+    Interarrivals are exponential in *engine-step* units (the discrete
+    clock both topologies share), cumsum'd and floored onto steps; gen
+    lengths are geometric clipped to ``gen_max`` so a few long tails
+    exercise slot churn without unbounded traces.
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(c["mean_interarrival"], c["n_requests"])
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    reqs = []
+    for i in range(c["n_requests"]):
+        plen = int(rng.choice(c["prompt_choices"]))
+        gen = int(min(1 + rng.geometric(1.0 / c["gen_mean"]), c["gen_max"]))
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        reqs.append({"prompt": prompt, "gen": gen,
+                     "arrival": int(arrivals[i])})
+    return reqs
+
+
+def _summarize(requests, slo, wall_s):
+    """TTFT/TPOT percentiles + goodput-under-SLO over completed requests."""
+    ttft = np.asarray([r["ttft_s"] for r in requests
+                       if r.get("ttft_s") is not None], float)
+    tpot = np.asarray([r["tpot_mean_s"] for r in requests
+                       if r.get("tpot_mean_s") is not None], float)
+    good = sum(1 for r in requests
+               if r.get("ttft_s") is not None
+               and r["ttft_s"] <= slo.ttft_s
+               and (r.get("tpot_mean_s") is None
+                    or r["tpot_mean_s"] <= slo.tpot_s))
+    n_tokens = sum(r["n_tokens"] for r in requests)
+
+    def pct(a):
+        if not len(a):
+            return {"p50": None, "p95": None, "p99": None}
+        return {"p50": float(np.percentile(a, 50)),
+                "p95": float(np.percentile(a, 95)),
+                "p99": float(np.percentile(a, 99))}
+    return {
+        "completed": len(requests),
+        "wall_s": wall_s,
+        "tokens": n_tokens,
+        "tokens_per_s": n_tokens / wall_s if wall_s > 0 else None,
+        "ttft_s": pct(ttft),
+        "tpot_s": pct(tpot),
+        "goodput_under_slo": good / max(len(requests), 1),
+        "goodput_requests": good,
+    }
+
+
+def _n_blocks(c):
+    maxb = -(-(max(c["prompt_choices"]) + c["gen_max"]) // c["block"])
+    return c["max_slots"] * maxb * 2 + 1
+
+
+def _run_monolithic(model, params, work, c):
+    from repro.serving import ServingEngine
+    eng = ServingEngine(model, params, n_blocks=_n_blocks(c),
+                        block_size=c["block"], max_slots=c["max_slots"])
+    for r in work:
+        eng.submit(r["prompt"], r["gen"], arrival=r["arrival"])
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    return _summarize(eng.request_metrics()["requests"],
+                      _slo(c), wall), eng.stats
+
+
+def _run_cluster(model, params, work, c):
+    from repro.serving import ServingCluster
+    clu = ServingCluster(model, params,
+                         prefill_replicas=c["prefill_replicas"],
+                         decode_replicas=c["decode_replicas"],
+                         slo_ttft_ms=c["slo_ttft_ms"],
+                         slo_tpot_ms=c["slo_tpot_ms"],
+                         engine_kwargs=dict(n_blocks=_n_blocks(c),
+                                            block_size=c["block"],
+                                            max_slots=c["max_slots"]))
+    for r in work:
+        clu.submit(r["prompt"], r["gen"], arrival=r["arrival"])
+    t0 = time.perf_counter()
+    clu.run()
+    wall = time.perf_counter() - t0
+    return _summarize(clu.request_metrics()["requests"],
+                      _slo(c), wall), clu.stats()
+
+
+def _slo(c):
+    from repro.platform import ServingSLO
+    return ServingSLO(ttft_ms=c["slo_ttft_ms"], tpot_ms=c["slo_tpot_ms"])
+
+
+def run():
+    from repro.configs.registry import smoke_config
+    from repro.models import build_model
+
+    c = _cases()
+    cfg = dataclasses.replace(smoke_config("codeqwen1.5-7b"),
+                              n_layers=c["n_layers"],
+                              compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    work = _workload(cfg, c)
+
+    mono, mono_stats = _run_monolithic(model, params, work, c)
+    disagg, clu_stats = _run_cluster(model, params, work, c)
+
+    for name, s in (("monolithic", mono), ("disaggregated", disagg)):
+        emit(f"serving.{name}.ttft_p95",
+             (s["ttft_s"]["p95"] or 0) * 1e6,
+             f"goodput={s['goodput_under_slo']:.2f}")
+        emit(f"serving.{name}.tpot_p95",
+             (s["tpot_s"]["p95"] or 0) * 1e6,
+             f"tokens_per_s={s['tokens_per_s']:.1f}")
+
+    payload = {
+        "backend": jax.default_backend(),
+        "slo": {"ttft_ms": c["slo_ttft_ms"], "tpot_ms": c["slo_tpot_ms"]},
+        "workload": {
+            "n_requests": c["n_requests"],
+            "prompt_choices": list(c["prompt_choices"]),
+            "gen_mean": c["gen_mean"], "gen_max": c["gen_max"],
+            "mean_interarrival_steps": c["mean_interarrival"],
+            "arrival_process": "poisson",
+        },
+        "topology": {"prefill_replicas": c["prefill_replicas"],
+                     "decode_replicas": c["decode_replicas"]},
+        "monolithic": mono,
+        "disaggregated": disagg,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("serving.bench_written", 0,
+         f"{OUT_PATH}(mono_goodput={mono['goodput_under_slo']:.2f},"
+         f"disagg_goodput={disagg['goodput_under_slo']:.2f})")
+    return {"ok": True, "monolithic": mono, "disaggregated": disagg,
+            "cluster_queue_depth": clu_stats["queue_depth"],
+            "monolithic_queue_depth": mono_stats["queue_depth"]}
+
+
+if __name__ == "__main__":
+    run()

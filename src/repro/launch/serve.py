@@ -6,6 +6,9 @@ continuous-batching engine (``--decode-impl paged``).
   PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1.5-7b \\
       --smoke --decode-impl paged --stagger 2 --block-size 16 \\
       --prefill-chunk 8 --temperature 0.8 --top-k 40
+  PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1.5-7b \\
+      --smoke --decode-impl paged --replicas 2 --prefill-replicas 2 \\
+      --slo-ttft-ms 500 --slo-tpot-ms 100
 """
 from __future__ import annotations
 
@@ -48,9 +51,18 @@ def main(argv=None):
                     choices=("bfloat16", "float8_e4m3", "int8"),
                     help="paged: quantized KV block dtype (default: the "
                          "model compute dtype, unquantized)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="paged: decode replicas in a disaggregated "
+                         "ServingCluster (0 = single-engine paths)")
+    ap.add_argument("--prefill-replicas", type=int, default=1,
+                    help="cluster: prefill replicas (with --replicas > 0)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=1000.0,
+                    help="cluster: TTFT SLO target for the router (ms)")
+    ap.add_argument("--slo-tpot-ms", type=float, default=200.0,
+                    help="cluster: TPOT SLO target for the router (ms)")
     ap.add_argument("--metrics", action="store_true",
-                    help="print the telemetry snapshot after the run "
-                         "(paged: engine.request_metrics() percentiles)")
+                    help="print the unified serving stats (and per-request "
+                         "percentiles) after the run")
     ap.add_argument("--trace", default="",
                     help="write a Chrome-trace JSON (chrome://tracing / "
                          "Perfetto) of the run to this path")
@@ -76,6 +88,8 @@ def main(argv=None):
         writer = TraceWriter()
         install_writer(writer)
     try:
+        if impl == "paged" and args.replicas > 0:
+            return _serve_cluster(model, params, batch, args)
         if impl == "paged":
             return _serve_paged(model, params, batch, args)
         return _serve_dense(model, params, batch, args)
@@ -85,6 +99,21 @@ def main(argv=None):
             uninstall_writer()
             writer.write(args.trace)
             print(f"trace written to {args.trace}")
+
+
+def _print_stats(stats, request_metrics=None):
+    """The one ``--metrics`` code path: every serving backend (dense,
+    paged, cluster) funnels its unified stats dict here, so the keys the
+    schema guarantees are the keys an operator greps for."""
+    import json
+
+    from repro.serving.stats import check_schema
+    check_schema(stats)
+    print("serving stats:")
+    print(json.dumps(stats, indent=2, default=str, sort_keys=True))
+    if request_metrics is not None:
+        print("request metrics:")
+        print(json.dumps(request_metrics, indent=2, default=str))
 
 
 def _serve_dense(model, params, batch, args):
@@ -117,10 +146,18 @@ def _serve_dense(model, params, batch, args):
     t_decode = time.time() - t0
 
     if args.metrics:
-        import json
-        from repro.telemetry import get_registry
-        print("telemetry snapshot:")
-        print(json.dumps(get_registry().snapshot(), indent=2, default=str))
+        from repro.serving.stats import serving_stats
+        from repro.telemetry import Histogram
+        h_ttft = Histogram("serve.ttft_s")
+        h_tpot = Histogram("serve.tpot_s")
+        per_step = t_decode / max(args.gen - 1, 1)
+        for _ in range(b):
+            h_ttft.record(t_prefill)
+            for _ in range(max(args.gen - 1, 1)):
+                h_tpot.record(per_step)
+        _print_stats(serving_stats(
+            requests_completed=b, queue_depth=0, evictions=0,
+            ttft=h_ttft, tpot=h_tpot, backend="dense"))
 
     gen = np.stack(out, axis=1)
     print(f"prefill {args.prompt_len} toks x{args.batch}: {t_prefill:.3f}s")
@@ -165,10 +202,50 @@ def _serve_paged(model, params, batch, args):
           f"amortized)")
     print(f"engine stats: {engine.stats}")
     if args.metrics:
-        import json
-        print("request metrics:")
-        print(json.dumps(engine.request_metrics(), indent=2, default=str))
+        _print_stats(dict(engine.stats), engine.request_metrics())
     gen = np.stack([outs[r] for r in rids])
+    print("sample generations:")
+    for row in gen[: min(4, args.batch)]:
+        print("  ", row.tolist())
+    return gen
+
+
+def _serve_cluster(model, params, batch, args):
+    """Disaggregated serving: M prefill + N decode replicas behind the
+    SLO-aware router, SeqState handed off between roles per request."""
+    from repro.serving import ServingCluster
+
+    tokens = np.asarray(batch["tokens"])
+    n_blocks = args.n_blocks or (
+        args.batch * (-(-(args.prompt_len + args.gen) // args.block_size))
+        * 2 + 1)
+    clu = ServingCluster(model, params,
+                         prefill_replicas=args.prefill_replicas,
+                         decode_replicas=args.replicas,
+                         slo_ttft_ms=args.slo_ttft_ms,
+                         slo_tpot_ms=args.slo_tpot_ms,
+                         temperature=args.temperature,
+                         top_k=args.top_k, seed=args.seed,
+                         engine_kwargs=dict(n_blocks=n_blocks,
+                                            block_size=args.block_size,
+                                            max_slots=args.batch,
+                                            prefill_chunk=args.prefill_chunk,
+                                            kv_dtype=args.kv_dtype))
+    crids = [clu.submit(row, args.gen, arrival=i * args.stagger)
+             for i, row in enumerate(tokens)]
+    t0 = time.time()
+    outs = clu.run()
+    t_total = time.time() - t0
+
+    stats = clu.stats()
+    print(f"cluster ({args.prefill_replicas}P+{args.replicas}D, "
+          f"SLO ttft<{args.slo_ttft_ms:g}ms tpot<{args.slo_tpot_ms:g}ms): "
+          f"{args.batch * args.gen} tokens over {clu.step_count} cluster "
+          f"steps in {t_total:.3f}s")
+    print(f"cluster stats: {stats}")
+    if args.metrics:
+        _print_stats(stats, clu.request_metrics())
+    gen = np.stack([outs[r] for r in crids])
     print("sample generations:")
     for row in gen[: min(4, args.batch)]:
         print("  ", row.tolist())

@@ -19,10 +19,10 @@ Leaves a model does not recognize (e.g. the serving engine's per-slot
 PRNG keys) pass through untouched.
 
 ``seq_state_specs(shape)`` / ``seq_state_axes(shape)`` describe the
-state layout for AOT lowering; ``prefill`` / ``decode_step`` /
-``paged_decode_step`` remain as thin deprecation shims over
-``forward`` (nothing in src/ outside this module may call them — CI
-guards it).
+state layout for AOT lowering.  The pre-chunk API (``prefill`` /
+``decode_step`` / ``paged_decode_step`` and their cache specs) is
+gone — the chunk calls above are the only serving surface, and CI
+guards that the old symbols stay deleted.
 
 Training API is unchanged: param_defs() / init(rng) / loss(params,
 batch).  ``build_model(cfg)`` dispatches on ``cfg.family``.
@@ -192,36 +192,6 @@ class BaseLM:
 
     def seq_state_axes(self, shape: ShapeConfig):
         raise NotImplementedError
-
-    # -- deprecated shims ---------------------------------------------------
-    # The pre-chunk API.  Kept only so external callers keep working; the
-    # legacy cache is exactly a SeqState plus a shared scalar "index".
-
-    def prefill(self, params, batch):
-        """DEPRECATED: one fresh whole-prompt chunk through forward()."""
-        tokens, positions, embeds = self.prompt_inputs(params, batch)
-        b, s = positions.shape
-        state = self.init_seq_state(params, s, batch=batch, batch_size=b)
-        state, logits = self.forward(params, state, tokens, positions,
-                                     embeds=embeds, fresh=True)
-        return dict(state, index=jnp.asarray(s, jnp.int32)), logits
-
-    def decode_step(self, params, cache, tokens):
-        """DEPRECATED: a T=1 chunk at the shared scalar index."""
-        cache = dict(cache)
-        index = cache.pop("index")
-        pos = jnp.broadcast_to(index, (tokens.shape[0], 1)).astype(jnp.int32)
-        state, logits = self.forward(params, cache, tokens[:, None], pos)
-        return dict(state, index=index + 1), logits
-
-    def cache_specs(self, shape: ShapeConfig):
-        """DEPRECATED: seq_state_specs plus the legacy scalar index."""
-        return dict(self.seq_state_specs(shape),
-                    index=jax.ShapeDtypeStruct((), "int32"))
-
-    def cache_axes(self, shape: ShapeConfig):
-        """DEPRECATED: seq_state_axes plus the legacy scalar index."""
-        return dict(self.seq_state_axes(shape), index=())
 
 
 # =========================== decoder-only ==================================
@@ -419,14 +389,6 @@ class DecoderLM(BaseLM):
         if quant:
             new["k_scale"], new["v_scale"] = ys[2], ys[3]
         return new, logits
-
-    def paged_decode_step(self, params, pools, block_tables, lengths,
-                          tokens):
-        """DEPRECATED: a T=1 paged chunk; lengths are the positions."""
-        state = dict(pools, block_tables=block_tables, lengths=lengths)
-        state, logits = self.forward(params, state, tokens[:, None],
-                                     lengths[:, None])
-        return {"k": state["k"], "v": state["v"]}, logits
 
     # ---- specs ----
 

@@ -1,9 +1,11 @@
 from repro.platform.failures import (FailureEvent, FailureInjector,
                                      FailureModel, SimulatedHardwareFailure)
 from repro.platform.runner import FTRunner, RunReport
-from repro.platform.scheduler import Cluster, Scheduler, Task
+from repro.platform.scheduler import (Cluster, Scheduler, ServingSLO,
+                                      SLORouter, Task, slo_score)
 from repro.platform.validator import Validator
 
 __all__ = ["FailureEvent", "FailureInjector", "FailureModel",
            "SimulatedHardwareFailure", "FTRunner", "RunReport", "Cluster",
-           "Scheduler", "Task", "Validator"]
+           "Scheduler", "ServingSLO", "SLORouter", "Task", "Validator",
+           "slo_score"]

@@ -171,3 +171,85 @@ class Scheduler:
 
     def utilization(self) -> float:
         return self._busy_node_hours / max(self._cap_node_hours, 1e-9)
+
+
+# --------------------------- serving router ----------------------------
+#
+# The serving-side counterpart of the gang scheduler above: instead of
+# whole-node allocations, it places *requests* onto serving replicas.
+# Placement is SLO-aware, not FIFO — each replica is scored against the
+# deployment's TTFT/TPOT targets using its live unified stats dict
+# (serving/stats.py schema: queue_depth, active_slots, ttft_p95/tpot_p95),
+# so a replica whose tail latency is already past target stops winning
+# admissions until it recovers.
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingSLO:
+    """Latency targets for one deployment (milliseconds)."""
+    ttft_ms: float = 1000.0
+    tpot_ms: float = 200.0
+
+    @property
+    def ttft_s(self) -> float:
+        return self.ttft_ms / 1e3
+
+    @property
+    def tpot_s(self) -> float:
+        return self.tpot_ms / 1e3
+
+
+def slo_score(queue_depth: int, inflight: int, p95_s: float,
+              slo_s: float) -> float:
+    """Load x SLO-pressure score; lower wins.
+
+    Load is the replica's total commitment (queued + in-flight, +1 so an
+    idle replica scores its pressure, not zero); pressure is how far its
+    p95 sits past the target, floored at 1 so replicas inside SLO
+    compete on load alone.  No recorded latency yet (p95 == 0) also
+    means pressure 1: an untouched replica is assumed healthy."""
+    pressure = 1.0
+    if p95_s > 0 and slo_s > 0:
+        pressure = max(1.0, p95_s / slo_s)
+    return (1.0 + queue_depth + inflight) * pressure
+
+
+class SLORouter:
+    """Pick the replica whose admission least endangers the SLO.
+
+    Prefill placement scores against the TTFT target (queue depth is
+    what delays a first token); decode placement against the TPOT
+    target (active slots are what dilate the per-token interval).  Ties
+    rotate round-robin per role, so an idle cluster still spreads
+    identical requests across replicas instead of piling onto index 0.
+    """
+
+    def __init__(self, slo: ServingSLO | None = None):
+        self.slo = slo or ServingSLO()
+        self._rr = {"prefill": 0, "decode": 0}
+
+    def _pick(self, role: str, scores: list[float]) -> int:
+        n = len(scores)
+        if n == 0:
+            raise ValueError(f"no {role} replicas to route to")
+        best = min(scores)
+        start = self._rr[role]
+        idx = next(i for i in (((start + j) % n) for j in range(n))
+                   if scores[i] == best)
+        self._rr[role] = (idx + 1) % n
+        return idx
+
+    def pick_prefill(self, stats_list: list[dict]) -> int:
+        """Index of the prefill replica to admit into; ``stats_list``
+        holds each replica's unified stats dict."""
+        return self._pick("prefill", [
+            slo_score(s["queue_depth"], s.get("active_slots", 0),
+                      s["ttft_p95"], self.slo.ttft_s)
+            for s in stats_list])
+
+    def pick_decode(self, stats_list: list[dict]) -> int:
+        """Index of the decode replica to hand a prefilled request to."""
+        return self._pick("decode", [
+            slo_score(s["queue_depth"], s.get("active_slots", 0),
+                      s["tpot_p95"], self.slo.tpot_s)
+            for s in stats_list])

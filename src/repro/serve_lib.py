@@ -92,14 +92,6 @@ def grow_seq_state(state: dict, needed: int):
     return out
 
 
-def grow_cache_geometric(cache, extra: int):
-    """DEPRECATED: legacy-cache ({..., "index"}) wrapper over
-    ``grow_seq_state`` for callers still on the prefill/decode_step
-    shims."""
-    needed = int(jax.device_get(cache["index"])) + extra
-    return grow_seq_state(cache, needed)
-
-
 class KVContextCache:
     def __init__(self, kv, namespace: str = "kvcache"):
         self.kv = kv            # repro.fs3.FS3KV-compatible
@@ -157,6 +149,12 @@ class BatchServer:
         self.metrics = Registry("batch_server")
         self._c_batches = self.metrics.counter("batch_server.batches")
         self._h_serve = self.metrics.histogram("batch_server.serve_s")
+        # Unified-schema request metrics for the dense lockstep path
+        # (the paged path reports through the engine's own registry).
+        self._c_completed = self.metrics.counter(
+            "batch_server.requests_completed")
+        self._h_ttft = self.metrics.histogram("batch_server.ttft_s")
+        self._h_tpot = self.metrics.histogram("batch_server.tpot_s")
         self._init = jax.jit(
             model.init_seq_state,
             static_argnames=("max_len", "batch_size", "dtype"))
@@ -164,16 +162,24 @@ class BatchServer:
 
     @property
     def stats(self) -> dict:
-        """One merged snapshot: server-level counters + (when the paged
-        path has run) the engine's registry-backed stats — the ad-hoc
-        per-call info-dict merge, behind one accessor."""
-        s = {"batches": self._c_batches.value,
-             "serve_s": self._h_serve.snapshot(),
-             "hit_rate": self.ctx.hit_rate if self.ctx else 0.0}
+        """Unified serving stats schema (``repro.serving.stats``): the
+        shared keys plus server-level extras.  When the paged path has
+        run, the engine's (already schema-conforming) stats are the
+        base; the dense lockstep path reports its own histograms."""
+        extras = {"batches": self._c_batches.value,
+                  "serve_s": self._h_serve.snapshot(),
+                  "hit_rate": self.ctx.hit_rate if self.ctx else 0.0}
         if self._engine is not None:
-            s.update(self._engine.stats)
+            s = dict(self._engine.stats)
+            s.update(extras)
             s["hit_rate"] = self._engine.cache.hit_rate
-        return s
+            return s
+        from repro.serving.stats import serving_stats
+        return serving_stats(
+            requests_completed=self._c_completed.value,
+            queue_depth=0,     # dense serve() is synchronous: no queue
+            evictions=0,
+            ttft=self._h_ttft, tpot=self._h_tpot, **extras)
 
     def _serve_paged(self, batch: dict, gen: int):
         from repro.serving import ServingEngine
@@ -210,6 +216,7 @@ class BatchServer:
     def _serve(self, batch: dict, gen: int):
         if self.decode_impl == "paged":
             return self._serve_paged(batch, gen)
+        t0 = now()
         tokens_np = np.asarray(batch["tokens"])
         b = tokens_np.shape[0]
         restored = None
@@ -230,11 +237,19 @@ class BatchServer:
 
         toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out = [np.asarray(toks)]
+        t_last = now()
+        for _ in range(b):       # lockstep: whole batch shares one TTFT
+            self._h_ttft.record(t_last - t0)
         for i in range(gen - 1):
             pos = jnp.full((b, 1), start + i, jnp.int32)
             state, logits = self._forward(self.params, state,
                                           toks[:, None], pos)
             toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             out.append(np.asarray(toks))
+            tnow = now()
+            for _ in range(b):
+                self._h_tpot.record(tnow - t_last)
+            t_last = tnow
+        self._c_completed.inc(b)
         info = {"hit_rate": self.ctx.hit_rate if self.ctx else 0.0}
         return np.stack(out, axis=1), info

@@ -15,7 +15,12 @@ pass, for prefill chunks, decode ticks, and speculative verify alike.
 ``cfg.decode_impl == "paged"``; the dense lockstep path remains the
 fallback for families without an attention KV cache.
 """
+from repro.serving.cluster import ClusterRequest, ServingCluster
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.paged_cache import PagedKVCache
+from repro.serving.prefix_store import FS3PrefixStore
+from repro.serving.stats import SHARED_KEYS, check_schema, serving_stats
 
-__all__ = ["PagedKVCache", "Request", "ServingEngine"]
+__all__ = ["ClusterRequest", "FS3PrefixStore", "PagedKVCache", "Request",
+           "SHARED_KEYS", "ServingCluster", "ServingEngine", "check_schema",
+           "serving_stats"]

@@ -44,7 +44,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve_lib import _prefix_key
 from repro.serving.paged_cache import PagedKVCache
+from repro.serving.stats import serving_stats
 from repro.telemetry import Registry, now, span
 
 _PAGED_FAMILIES = ("dense", "moe", "hybrid")
@@ -75,6 +77,10 @@ class Request:
     slot: int = -1
     admitted_at: int = -1
     status: str = "queued"             # queued | prefilling | running | done
+    # -- cluster handoff (prefill/decode disaggregation) --
+    keep_blocks: bool = False          # retain blocks at done for export
+    artifact: dict | None = None       # imported prefill (skips prefill)
+    export_extras: dict | None = None  # non-KV state stashed for export
     # -- telemetry (host wall clock; recorded at completion, not drain) --
     t_submit: float | None = None      # submit() call
     t_admit: float | None = None       # first admission attempt starts
@@ -118,7 +124,8 @@ class ServingEngine:
                  pool_dtype: str = "bfloat16", share_prefixes: bool = True,
                  min_table_width: int = 2, prefill_chunk: int = 0,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 kv_dtype: str | None = None):
+                 kv_dtype: str | None = None, prefill_role: bool = False,
+                 prefix_store=None):
         cfg = model.cfg
         if cfg.family not in _PAGED_FAMILIES:
             raise ValueError(
@@ -140,6 +147,14 @@ class ServingEngine:
         # recurrence get exact-length chunks (no padding through state).
         self.prefill_chunk = prefill_chunk
         self.pad_prefill = model.prefill_padding_ok
+        # Disaggregation: a prefill-role replica runs prompts to their
+        # first token (max_new_tokens=1, keep_blocks=True) and hands the
+        # blocks off via export_request(); chunked prefill advances even
+        # with no running decode slots so the cluster loop can interleave
+        # replicas.  prefix_store (cluster-wide 3FS-backed cache) makes
+        # locally-evicted prefix entries restorable by any replica.
+        self.prefill_role = prefill_role
+        self.prefix_store = prefix_store
         # Engine-level sampling defaults; submit() overrides per request.
         self.temperature = temperature
         self.top_k = top_k
@@ -166,6 +181,11 @@ class ServingEngine:
         self._h_ttft = self.metrics.histogram("engine.ttft_s")
         self._h_tpot = self.metrics.histogram("engine.tpot_s")
         self._h_queue = self.metrics.histogram("engine.queue_wait_s")
+        self._c_store_hits = self.metrics.counter("engine.store_hits")
+        if prefix_store is not None:
+            # write-back: LRU-evicted prefix entries publish to the
+            # cluster store while their blocks are still readable
+            self.cache.on_prefix_evict = self._publish_prefix
 
         def _chunk_fn(params, state, tokens, positions, fresh):
             self._c_prefill_traces.inc()
@@ -235,14 +255,42 @@ class ServingEngine:
 
     def submit(self, prompt, max_new_tokens: int, arrival: int = 0,
                temperature: float | None = None, top_k: int | None = None,
-               seed: int | None = None) -> int:
+               seed: int | None = None, *, keep_blocks: bool = False,
+               t_submit: float | None = None) -> int:
+        """Queue a request.  ``keep_blocks`` retains its pool blocks at
+        completion for ``export_request`` (the cluster's prefill leg —
+        pair with ``max_new_tokens=1``); ``t_submit`` carries the true
+        submit time through a multi-engine pipeline so TTFT covers the
+        whole path, not just this engine."""
         req = Request(prompt=np.asarray(prompt, np.int32).reshape(-1),
                       max_new_tokens=max_new_tokens, arrival=arrival,
                       temperature=self.temperature if temperature is None
                       else temperature,
                       top_k=self.top_k if top_k is None else top_k,
                       seed=self.seed if seed is None else seed,
-                      rid=self._next_rid, t_submit=now())
+                      rid=self._next_rid, keep_blocks=keep_blocks,
+                      t_submit=now() if t_submit is None else t_submit)
+        self._next_rid += 1
+        self._queue.append(req)
+        return req.rid
+
+    def submit_prefilled(self, artifact: dict, max_new_tokens: int,
+                         arrival: int = 0, temperature: float | None = None,
+                         top_k: int | None = None,
+                         seed: int | None = None) -> int:
+        """Queue a request whose prompt KV arrives as an exported
+        handoff artifact (see ``export_request``): admission imports the
+        blocks instead of prefilling, so this engine never runs the
+        prompt — the decode leg of a disaggregated cluster."""
+        req = Request(prompt=np.asarray(artifact["prompt"],
+                                        np.int32).reshape(-1),
+                      max_new_tokens=max_new_tokens, arrival=arrival,
+                      temperature=self.temperature if temperature is None
+                      else temperature,
+                      top_k=self.top_k if top_k is None else top_k,
+                      seed=self.seed if seed is None else seed,
+                      rid=self._next_rid, artifact=artifact,
+                      t_submit=artifact.get("t_submit") or now())
         self._next_rid += 1
         self._queue.append(req)
         return req.rid
@@ -368,8 +416,14 @@ class ServingEngine:
             req.t_first = tnow    # *first* time the first token existed
         req.t_last = tnow
         if req.done:        # max_new_tokens == 1: the prefill was enough
-            self.cache.free(blocks)
-            req.blocks, req.status = [], "done"
+            if req.keep_blocks:
+                # handoff: blocks stay allocated (and extras stashed)
+                # until export_request() harvests them
+                req.export_extras = extras1
+            else:
+                self.cache.free(blocks)
+                req.blocks = []
+            req.status = "done"
             self._record_request(req)
             self._done[req.rid] = req
             return
@@ -385,9 +439,17 @@ class ServingEngine:
     def _start(self, req: Request) -> bool:
         if req.t_admit is None:   # queue wait ends at first admission try
             req.t_admit = now()
+        if req.artifact is not None:
+            return self._start_from_artifact(req)
         restored = None
         if self.share_prefixes and req.greedy:
             restored = self.cache.lookup_prefix(req.prompt)
+            if restored is None and self.prefix_store is not None:
+                # local miss -> cluster store: another replica may have
+                # published this prefix; a restore lands it in the local
+                # index, so the retry below hits
+                if self._restore_from_store(req.prompt):
+                    restored = self.cache.lookup_prefix(req.prompt)
         if restored is not None:
             blocks, length, first, extras = restored
             self._occupy(req, blocks, length, first, extras)
@@ -395,7 +457,8 @@ class ServingEngine:
         job = self._start_job(req)
         if job is None:
             return False
-        if self.prefill_chunk and any(r is not None for r in self._slots):
+        if self.prefill_chunk and (self.prefill_role or
+                                   any(r is not None for r in self._slots)):
             # chunked + a running batch: advance one chunk per step so
             # admission interleaves with decode ticks
             req.status = "prefilling"
@@ -405,6 +468,96 @@ class ServingEngine:
             self._advance_job(job)
         self._finish_job(job)
         return True
+
+    # --------------------------- cluster handoff ---------------------------
+    #
+    # The SeqState handoff contract (DESIGN.md §11): because the chunk
+    # API keeps *all* per-sequence state in the paged pools (KV blocks +
+    # scale rows) plus a small extras pytree, a request's entire serving
+    # state serializes as host arrays — block contents, length, the
+    # first sampled token (the one thing blocks can't reconstruct), and
+    # extras.  Any same-config engine can import it and keep decoding.
+
+    def export_request(self, rid: int) -> dict:
+        """Harvest a finished ``keep_blocks`` request as a handoff
+        artifact and release its blocks.  The artifact is self-contained
+        host data: safe to ship to another replica (or through 3FS)."""
+        req = self._done.pop(rid)
+        art = {
+            "prompt": req.prompt,
+            "length": req.length,
+            "first_token": int(req.tokens[0]),
+            "blocks": self.cache.export_blocks(req.blocks),
+            "extras": jax.device_get(req.export_extras or {}),
+            "t_submit": req.t_submit,
+            "t_first": req.t_first,
+            "n_evictions": req.n_evictions,
+        }
+        self.cache.free(req.blocks)
+        req.blocks, req.export_extras = [], None
+        return art
+
+    def _start_from_artifact(self, req: Request) -> bool:
+        """Admit by importing an exported prefill instead of running the
+        prompt.  TTFT stays anchored at the prefill replica's first
+        token; eviction after import falls back to a local (prefix-hit
+        or cold) prefill, which determinism makes token-identical."""
+        art = req.artifact
+        length = int(art["length"])
+        n = self.cache.blocks_for(length)
+        if self.cache.num_free < n:
+            self.cache.reclaim(n)
+        ids = self.cache.alloc(n)
+        if ids is None:
+            return False
+        with span("engine.import_artifact", rid=req.rid, blocks=n):
+            self.cache.import_blocks(ids, art["blocks"])
+        extras = dict(art.get("extras") or {})
+        first = int(art["first_token"])
+        req.t_first = art.get("t_first")
+        req.n_evictions += int(art.get("n_evictions") or 0)
+        if self.share_prefixes and req.greedy:
+            self.cache.register_prefix(req.prompt, ids, length, first,
+                                       extras=extras or None)
+        req.artifact = None     # imported; drop the host copy
+        self._occupy(req, ids, length, first, extras)
+        return True
+
+    def _restore_from_store(self, prompt: np.ndarray) -> bool:
+        """Pull a published prefix from the cluster store into the local
+        index (alloc -> import -> register -> drop our ref: the index
+        owns the blocks, exactly as after a local prefill)."""
+        art = self.prefix_store.fetch(_prefix_key(prompt))
+        if art is None:
+            return False
+        length = int(art["length"])
+        n = self.cache.blocks_for(length)
+        if self.cache.num_free < n:
+            self.cache.reclaim(n)
+        ids = self.cache.alloc(n)
+        if ids is None:
+            return False
+        with span("engine.store_restore", blocks=n):
+            self.cache.import_blocks(ids, art["blocks"])
+        extras = dict(art.get("extras") or {})
+        self.cache.register_prefix(prompt, ids, length,
+                                   int(art["first_token"]),
+                                   extras=extras or None)
+        self.cache.free(ids)    # the prefix index holds the live ref
+        self._c_store_hits.inc()
+        return True
+
+    def _publish_prefix(self, key, ids, length, first, extras) -> None:
+        """``on_prefix_evict`` hook: write a locally-evicted prefix
+        entry back to the cluster store while its blocks are still
+        readable, so any replica can restore it later."""
+        with span("engine.store_publish", blocks=len(ids)):
+            self.prefix_store.publish(key, {
+                "length": int(length),
+                "first_token": int(first),
+                "blocks": self.cache.export_blocks(ids),
+                "extras": jax.device_get(extras) if extras else {},
+            })
 
     # ------------------------------- decode --------------------------------
 
@@ -488,7 +641,11 @@ class ServingEngine:
         self._admit()
         active = [r for r in self._slots if r is not None]
         if not active:
-            if (self._job is None and self._queue
+            # Done-but-unharvested keep_blocks requests hold pool blocks;
+            # admission may be waiting on the cluster to export them, so
+            # an idle tick is progress, not a stall.
+            held = any(r.blocks for r in self._done.values())
+            if (self._job is None and self._queue and not held
                     and self._queue[0].arrival <= self.step_count):
                 raise RuntimeError(
                     f"request {self._queue[0].rid} cannot be admitted even "
@@ -645,12 +802,19 @@ class ServingEngine:
 
     @property
     def stats(self) -> dict:
-        return {
-            "steps": self.step_count,
-            "evictions": self.evictions,
-            "requests_completed": self._c_completed.value,
-            "prefix_hit_rate": self.cache.hit_rate,
-            "free_blocks": self.cache.num_free,
-            "prefill_traces": self.prefill_traces,
-            "decode_traces": self.decode_traces,
-        }
+        """Unified serving stats schema (``serving/stats.py``) plus
+        engine-specific extras."""
+        return serving_stats(
+            requests_completed=self._c_completed.value,
+            queue_depth=len(self._queue) + (1 if self._job is not None
+                                            else 0),
+            evictions=self.evictions,
+            ttft=self._h_ttft, tpot=self._h_tpot,
+            steps=self.step_count,
+            active_slots=sum(r is not None for r in self._slots),
+            prefix_hit_rate=self.cache.hit_rate,
+            store_hits=self._c_store_hits.value,
+            free_blocks=self.cache.num_free,
+            prefill_traces=self.prefill_traces,
+            decode_traces=self.decode_traces,
+        )

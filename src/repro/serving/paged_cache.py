@@ -79,6 +79,24 @@ def _scatter_blocks_quant(k_pool, v_pool, ks_pool, vs_pool, k, v, block_ids):
 
 
 @functools.partial(jax.jit, donate_argnums=_DONATE)
+def _set_blocks(k_pool, v_pool, kb, vb, block_ids):
+    """Write already-blocked K/V (L, n, bs, kv, hd) into pool blocks —
+    the cross-replica import path (contents arrive pre-blocked and, for
+    quantized pools, pre-quantized: no requantization, bit-identical)."""
+    return (k_pool.at[:, block_ids].set(kb.astype(k_pool.dtype)),
+            v_pool.at[:, block_ids].set(vb.astype(v_pool.dtype)))
+
+
+@functools.partial(jax.jit, donate_argnums=_DONATE_Q)
+def _set_blocks_quant(k_pool, v_pool, ks_pool, vs_pool, kb, vb, ksb, vsb,
+                      block_ids):
+    return (k_pool.at[:, block_ids].set(kb.astype(k_pool.dtype)),
+            v_pool.at[:, block_ids].set(vb.astype(v_pool.dtype)),
+            ks_pool.at[:, block_ids].set(ksb.astype(ks_pool.dtype)),
+            vs_pool.at[:, block_ids].set(vsb.astype(vs_pool.dtype)))
+
+
+@functools.partial(jax.jit, donate_argnums=_DONATE)
 def _copy_block(k_pool, v_pool, src, dst):
     return (k_pool.at[:, dst].set(k_pool[:, src]),
             v_pool.at[:, dst].set(v_pool[:, src]))
@@ -130,6 +148,11 @@ class PagedKVCache:
         self._prefix_lru: list[str] = []
         self.hits = 0
         self.misses = 0
+        # Cluster hook: called as on_prefix_evict(key, ids, length,
+        # first_token, extras) *before* an LRU-reclaimed prefix entry's
+        # blocks are freed — the engine publishes the block contents to
+        # the 3FS-backed cluster prefix store here (DESIGN.md §11).
+        self.on_prefix_evict = None
 
     # ------------------------------ allocator ------------------------------
 
@@ -182,6 +205,49 @@ class PagedKVCache:
                                       k, v, ids))
         else:
             self.k, self.v = _scatter_blocks(self.k, self.v, k, v, ids)
+
+    def export_blocks(self, block_ids) -> dict:
+        """Device-get the contents of ``block_ids`` as host arrays:
+        ``{"k", "v"[, "k_scale", "v_scale"]}`` shaped (L, n, bs, ...).
+        Quantized pools export their raw sub-bf16 codes *with* the
+        per-token scale rows, so a later import is bit-identical — the
+        SeqState-handoff / cluster-prefix-cache wire format."""
+        ids = np.asarray(list(block_ids), np.int32)
+        out = {"k": np.asarray(jax.device_get(self.k[:, ids])),
+               "v": np.asarray(jax.device_get(self.v[:, ids]))}
+        if self.quantized:
+            out["k_scale"] = np.asarray(jax.device_get(self.k_scale[:, ids]))
+            out["v_scale"] = np.asarray(jax.device_get(self.v_scale[:, ids]))
+        return out
+
+    def import_blocks(self, block_ids, data: dict) -> None:
+        """Write exported block contents into ``block_ids`` of *this*
+        pool (caller allocs).  Shapes must match the pool layout — a
+        mismatch means the artifact came from a differently-configured
+        replica, which the cluster key scheme is meant to preclude."""
+        L, _, bs, kvh, hd = self.k.shape
+        kb = np.asarray(data["k"])
+        if kb.shape[0] != L or kb.shape[2:] != (bs, kvh, hd):
+            raise ValueError(
+                f"imported blocks {kb.shape} do not fit pool layout "
+                f"(L={L}, bs={bs}, kv={kvh}, hd={hd})")
+        if len(block_ids) != kb.shape[1]:
+            raise ValueError(f"{len(block_ids)} target blocks for "
+                             f"{kb.shape[1]} imported blocks")
+        ids = jnp.asarray(list(block_ids), jnp.int32)
+        if self.quantized:
+            if "k_scale" not in data:
+                raise ValueError("quantized pool import needs scale rows")
+            self.k, self.v, self.k_scale, self.v_scale = _set_blocks_quant(
+                self.k, self.v, self.k_scale, self.v_scale,
+                jnp.asarray(kb, self.k.dtype),
+                jnp.asarray(np.asarray(data["v"]), self.v.dtype),
+                jnp.asarray(np.asarray(data["k_scale"]), jnp.float32),
+                jnp.asarray(np.asarray(data["v_scale"]), jnp.float32), ids)
+        else:
+            self.k, self.v = _set_blocks(
+                self.k, self.v, jnp.asarray(kb, self.k.dtype),
+                jnp.asarray(np.asarray(data["v"]), self.v.dtype), ids)
 
     def copy_block(self, src: int) -> int | None:
         """Copy-on-write: duplicate one block into a fresh allocation."""
@@ -248,6 +314,16 @@ class PagedKVCache:
             self._prefix_lru.append(key)
         return blocks, length, first_token, extras
 
+    def _drop_prefix_entry(self, key: str) -> None:
+        """Release one prefix entry, publishing it through the
+        ``on_prefix_evict`` hook (while its blocks are still readable)
+        before dropping the index's references."""
+        self._prefix_lru.remove(key)
+        ids, length, first, extras = self._prefix.pop(key)
+        if self.on_prefix_evict is not None:
+            self.on_prefix_evict(key, ids, length, first, extras)
+        self.free(ids)
+
     def reclaim(self, n_blocks: int, *, keep: tuple = ()) -> bool:
         """Release LRU prefix entries until ``n_blocks`` are allocatable.
         Entries named in ``keep`` are spared (e.g. the prefix currently
@@ -256,10 +332,17 @@ class PagedKVCache:
             key = next((k for k in self._prefix_lru if k not in keep), None)
             if key is None:
                 break
-            self._prefix_lru.remove(key)
-            ids = self._prefix.pop(key)[0]
-            self.free(ids)
+            self._drop_prefix_entry(key)
         return self.num_free >= n_blocks
+
+    def drop_prefixes(self) -> int:
+        """Release every prefix entry (each publishes through the
+        ``on_prefix_evict`` hook first) — the cluster's write-back flush
+        to the 3FS store.  Returns the number of entries dropped."""
+        keys = list(self._prefix_lru)
+        for key in keys:
+            self._drop_prefix_entry(key)
+        return len(keys)
 
     @property
     def hit_rate(self) -> float:

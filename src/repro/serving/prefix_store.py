@@ -1,0 +1,97 @@
+"""Cluster-wide prefix cache: exported KV blocks in 3FS-KV.
+
+Each ``ServingEngine`` keeps a per-pool prefix index (restore by block
+reference, O(1)).  ``FS3PrefixStore`` is the tier below it: when an
+engine's LRU drops a prefix entry, the blocks are *published* here
+(write-back through the cache's ``on_prefix_evict`` hook) instead of
+just vanishing — CRAQ-replicated via the 3FS chain, so any replica's
+cold prefill can first try ``fetch`` and import a prefix some *other*
+replica computed.  This is the paper's KV-context-caching-on-disk
+(§VI-B4) lifted from a per-process cache to a cluster cache.
+
+Key scheme (DESIGN.md §11): ``prefix_{tag}`` namespace +
+``serve_lib._prefix_key`` content hash (sha256 of the exact token
+prefix, 32 hex chars) — the same identity function the in-pool index
+and ``KVContextCache`` use.  ``tag`` must encode everything that makes
+blocks non-portable between engines (params identity, kv_dtype, block
+size); bumping it is the invalidation story — stale entries are never
+overwritten in place, they become unreachable.
+
+Values are msgpack with self-describing arrays (shape/dtype/bytes —
+``fetch`` has no template to decode against, unlike
+``serve_lib._unpack_tree``).  Quantized pools' raw fp8/int8 codes and
+their fp32 scale rows round-trip byte-exact, which is what makes a
+store restore bit-identical to the publishing replica's prefill.
+"""
+from __future__ import annotations
+
+import msgpack
+import numpy as np
+
+from repro.serve_lib import _np_dtype
+
+
+def _enc(obj):
+    """Recursively encode dict/list/scalars/ndarrays for msgpack."""
+    if isinstance(obj, dict):
+        return {k: _enc(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_enc(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        a = np.ascontiguousarray(obj)
+        return {"__nd__": True, "shape": list(a.shape),
+                "dtype": str(a.dtype), "data": a.tobytes()}
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    return obj
+
+
+def _dec(obj):
+    if isinstance(obj, dict):
+        if obj.get("__nd__"):
+            return np.frombuffer(obj["data"],
+                                 dtype=_np_dtype(obj["dtype"])).reshape(
+                                     obj["shape"])
+        return {k: _dec(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_dec(v) for v in obj]
+    return obj
+
+
+class FS3PrefixStore:
+    """Publish/fetch prefix artifacts on an ``FS3KV``-compatible store.
+
+    ``publish(key, artifact)`` and ``fetch(key) -> artifact | None``
+    where ``key`` is a ``serve_lib._prefix_key`` hash and ``artifact``
+    is ``{"length", "first_token", "blocks": {...}, "extras": {...}}``
+    as built by the engine's handoff/publish paths.
+    """
+
+    def __init__(self, kv, tag: str = ""):
+        self.kv = kv
+        self.tag = tag
+        self.publishes = 0
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> str:
+        return f"prefix_{self.tag}/{key}" if self.tag else f"prefix/{key}"
+
+    def publish(self, key: str, artifact: dict) -> None:
+        self.kv.put(self._path(key), msgpack.packb(_enc(artifact)))
+        self.publishes += 1
+
+    def fetch(self, key: str):
+        raw = self.kv.get(self._path(key))
+        if raw is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return _dec(msgpack.unpackb(raw, strict_map_key=False))
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

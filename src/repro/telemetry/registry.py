@@ -154,6 +154,16 @@ class Histogram:
     def percentiles(self, qs=(50, 95, 99)) -> dict:
         return {f"p{q:g}": self.percentile(q) for q in qs}
 
+    def merge(self, other: "Histogram") -> None:
+        """Fold another histogram's retained samples into this one —
+        how the serving cluster aggregates per-replica latency
+        distributions into one cluster-level view.  Exact while every
+        source is inside its sample window (65 536 values — true for
+        any realistic serve/bench run); a source past its window
+        contributes only its retained samples."""
+        for v in other._samples:
+            self.record(v)
+
     def reset(self) -> None:
         self._samples.clear()
         self._counts = [0] * len(self._counts)

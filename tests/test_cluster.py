@@ -1,0 +1,264 @@
+"""Disaggregated serving cluster (DESIGN.md §11): SLO-aware router,
+prefill->decode SeqState handoff, the 3FS-backed cluster prefix store,
+and the unified serving stats schema every backend reports through."""
+import dataclasses as dc
+
+import jax
+import numpy as np
+import pytest
+
+from repro.platform import ServingSLO, SLORouter, slo_score
+from repro.serving import (ServingCluster, ServingEngine, check_schema,
+                           serving_stats)
+
+RNG = np.random.default_rng(17)
+
+
+def _build():
+    from repro.configs.registry import smoke_config
+    from repro.models import build_model
+    cfg = dc.replace(smoke_config("codeqwen1.5-7b"), n_layers=2,
+                     compute_dtype="float32")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _build()
+
+
+def _prompts(cfg, sizes):
+    return [RNG.integers(0, cfg.vocab_size, s).astype(np.int32)
+            for s in sizes]
+
+
+def _mono(model, params, prompts, gen, **kw):
+    eng = ServingEngine(model, params, n_blocks=64, block_size=16,
+                        max_slots=len(prompts), **kw)
+    rids = [eng.submit(p, gen) for p in prompts]
+    outs = eng.run()
+    return [outs[r] for r in rids]
+
+
+def _cluster(model, params, **kw):
+    kw.setdefault("engine_kwargs",
+                  dict(n_blocks=64, block_size=16, max_slots=4))
+    return ServingCluster(model, params, **kw)
+
+
+# ------------------------------ SLO router ---------------------------------
+
+
+def test_slo_score_pressure():
+    slo = ServingSLO(ttft_ms=1000.0, tpot_ms=200.0)
+    assert slo.ttft_s == 1.0 and slo.tpot_s == 0.2
+    # under SLO: score is pure load
+    assert slo_score(queue_depth=2, inflight=1, p95_s=0.5,
+                     slo_s=slo.ttft_s) == 4.0
+    # over SLO: load multiplied by the violation ratio
+    assert slo_score(queue_depth=2, inflight=1, p95_s=2.0,
+                     slo_s=slo.ttft_s) == pytest.approx(4.0 * 2.0)
+    # no samples yet -> no pressure term
+    assert slo_score(queue_depth=0, inflight=0, p95_s=0.0,
+                     slo_s=slo.ttft_s) == 1.0
+
+
+def test_router_prefers_low_load_and_backpressure():
+    router = SLORouter(ServingSLO(ttft_ms=1000.0, tpot_ms=200.0))
+
+    def stats(depth, slots, p95):
+        return {"queue_depth": depth, "active_slots": slots,
+                "ttft_p95": p95, "tpot_p95": p95}
+    # empty replica wins over loaded one
+    assert router.pick_prefill([stats(3, 2, 0.1), stats(0, 0, 0.1)]) == 1
+    # equal load, one is blowing its SLO -> the healthy one wins
+    assert router.pick_prefill([stats(1, 1, 5.0), stats(1, 1, 0.1)]) == 1
+
+
+def test_router_tie_rotation():
+    """Equal scores must rotate (round-robin), not pile onto replica 0."""
+    router = SLORouter(ServingSLO())
+    tied = [{"queue_depth": 0, "active_slots": 0,
+             "ttft_p95": 0.0, "tpot_p95": 0.0} for _ in range(3)]
+    picks = [router.pick_decode(tied) for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+
+
+# ------------------------------ stats schema -------------------------------
+
+
+def test_serving_stats_schema_helpers():
+    from repro.telemetry import Histogram
+    h = Histogram("t")
+    h.record(0.5)
+    s = serving_stats(requests_completed=1, queue_depth=0, evictions=0,
+                      ttft=h, tpot=h, extra_key=3)
+    check_schema(s)
+    assert s["ttft_p95"] == pytest.approx(0.5) and s["extra_key"] == 3
+    with pytest.raises(ValueError):
+        serving_stats(requests_completed=1, queue_depth=0, evictions=0,
+                      ttft=h, tpot=h, **{"ttft_p50": 1.0})
+    with pytest.raises(KeyError):
+        check_schema({"requests_completed": 0})
+
+
+def test_unified_schema_across_backends(setup):
+    """ServingEngine.stats, BatchServer.stats (dense, engine-less) and
+    ServingCluster.stats() all satisfy one schema — including the
+    cluster's nested per-replica dicts."""
+    cfg, model, params = setup
+    eng = ServingEngine(model, params, n_blocks=16, block_size=16,
+                        max_slots=2)
+    check_schema(eng.stats)
+
+    from repro.serve_lib import BatchServer
+    check_schema(BatchServer(model, params, None).stats)
+
+    clu = _cluster(model, params, prefill_replicas=1, decode_replicas=1)
+    s = clu.stats()
+    check_schema(s)
+    assert set(s["replicas"]) == {"prefill0", "decode0"}
+
+
+# --------------------------- cluster end-to-end ----------------------------
+
+
+def test_cluster_matches_monolithic_staggered(setup):
+    """2P+2D disaggregated serving is a pure refactor of the compute:
+    greedy token streams are identical to a monolithic engine, for
+    requests arriving staggered across cluster steps."""
+    cfg, model, params = setup
+    prompts = _prompts(cfg, (13, 21, 9, 17))
+    gen = 6
+    ref = _mono(model, params, prompts, gen)
+
+    clu = _cluster(model, params, prefill_replicas=2, decode_replicas=2)
+    crids = [clu.submit(p, gen, arrival=2 * i)
+             for i, p in enumerate(prompts)]
+    outs = clu.run()
+    for crid, r in zip(crids, ref):
+        np.testing.assert_array_equal(outs[crid], r)
+
+    s = clu.stats()
+    check_schema(s)
+    assert s["requests_completed"] == len(prompts)
+    # every request crossed the prefill->decode handoff
+    log = clu.request_metrics()["requests"]
+    assert all(e["decode_replica"] is not None for e in log)
+    assert {e["prefill_replica"] for e in log} == {0, 1}
+
+
+def test_cluster_eviction_recovers_tokens(setup):
+    """Evicting a request mid-decode on its decode replica must replay
+    deterministically: final tokens still match the monolithic run and
+    the eviction shows in the unified stats."""
+    cfg, model, params = setup
+    prompts = _prompts(cfg, (14, 22))
+    gen = 8
+    ref = _mono(model, params, prompts, gen)
+
+    clu = _cluster(model, params, prefill_replicas=2, decode_replicas=2)
+    crids = [clu.submit(p, gen) for p in prompts]
+    # step until the first request is decoding, then preempt it
+    for _ in range(200):
+        clu.step()
+        if any(c.crid == crids[0] for c in clu._dc_inflight.values()):
+            break
+    else:
+        pytest.fail("request never reached a decode replica")
+    clu.evict(crids[0])
+    outs = clu.run()
+    for crid, r in zip(crids, ref):
+        np.testing.assert_array_equal(outs[crid], r)
+    assert clu.stats()["evictions"] >= 1
+
+
+def test_cross_replica_prefix_store_hit(setup, tmp_path):
+    """A prefix prefilled on replica A, written back to the 3FS store on
+    eviction, must warm replica B's cold prefill: B's continuation is
+    bit-identical to a cold run and the store-hit counter moves."""
+    from repro.fs3 import FS3KV, FS3Client, FS3Cluster
+    from repro.serving import FS3PrefixStore
+
+    cfg, model, params = setup
+    prompt = _prompts(cfg, (21,))[0]          # COW tail exercises scales
+    gen = 6
+    cold = _mono(model, params, [prompt], gen)[0]
+
+    fs3 = FS3Cluster(str(tmp_path), n_nodes=3, targets_per_node=2,
+                     replication=2)
+    store = FS3PrefixStore(FS3KV(FS3Client(fs3)), tag="test")
+    clu = _cluster(model, params, prefill_replicas=2, decode_replicas=1,
+                   prefix_store=store)
+
+    first = clu.submit(prompt, gen)
+    out1 = clu.run()[first]
+    np.testing.assert_array_equal(out1, cold)
+    # flush replica-local warmth into the store (write-back on evict)
+    assert clu.flush_prefixes() >= 1
+    assert store.publishes >= 1
+
+    # resubmit: the router's round-robin moves to the *other* prefill
+    # replica, which has never seen the prompt — it must restore from
+    # the store, not recompute
+    hits0 = [e._c_store_hits.value for e in clu.prefill_engines]
+    second = clu.submit(prompt, gen)
+    out2 = clu.run()[second]
+    hits1 = [e._c_store_hits.value for e in clu.prefill_engines]
+    assert sum(hits1) == sum(hits0) + 1, (hits0, hits1)
+    np.testing.assert_array_equal(out2, cold)
+    assert clu.stats()["store_hits"] == sum(hits1)
+
+
+def test_cross_replica_store_hit_quantized(setup, tmp_path):
+    """Same write-back/restore path with fp8 pools: the artifact must
+    carry the per-token scale rows (a restore that dropped them would
+    dequantize with unit scales and diverge)."""
+    from repro.fs3 import FS3KV, FS3Client, FS3Cluster
+    from repro.serving import FS3PrefixStore
+
+    cfg, model, params = setup
+    prompt = _prompts(cfg, (21,))[0]
+    gen = 6
+    cold = _mono(model, params, [prompt], gen, kv_dtype="float8_e4m3")[0]
+
+    fs3 = FS3Cluster(str(tmp_path), n_nodes=2, targets_per_node=1,
+                     replication=1)
+    store = FS3PrefixStore(FS3KV(FS3Client(fs3)), tag="q")
+    clu = _cluster(model, params, prefill_replicas=2, decode_replicas=1,
+                   prefix_store=store,
+                   engine_kwargs=dict(n_blocks=64, block_size=16,
+                                      max_slots=4,
+                                      kv_dtype="float8_e4m3"))
+    a = clu.submit(prompt, gen)
+    np.testing.assert_array_equal(clu.run()[a], cold)
+    clu.flush_prefixes()
+    b = clu.submit(prompt, gen)
+    np.testing.assert_array_equal(clu.run()[b], cold)
+    assert sum(e._c_store_hits.value for e in clu.prefill_engines) == 1
+
+
+# ------------------------------ bench smoke --------------------------------
+
+
+def test_serving_bench_smoke(tmp_path, monkeypatch):
+    """The serving suite writes BENCH_serving.json with percentiles and
+    goodput-under-SLO for both topologies."""
+    import json
+
+    import benchmarks.serving_bench as sb
+    monkeypatch.setenv("REPRO_BENCH_SMOKE", "1")
+    monkeypatch.setattr(sb, "OUT_PATH", str(tmp_path / "BENCH_serving.json"))
+    out = sb.run()
+    assert out["ok"]
+    payload = json.loads((tmp_path / "BENCH_serving.json").read_text())
+    for topo in ("monolithic", "disaggregated"):
+        s = payload[topo]
+        assert s["completed"] == payload["workload"]["n_requests"]
+        for m in ("ttft_s", "tpot_s"):
+            assert set(s[m]) == {"p50", "p95", "p99"}
+            assert all(v is not None for v in s[m].values())
+        assert 0.0 <= s["goodput_under_slo"] <= 1.0
+    assert payload["slo"]["ttft_ms"] > 0
+    assert payload["workload"]["arrival_process"] == "poisson"

@@ -83,6 +83,126 @@ def test_kv_and_queue(client):
     assert q.pop() is None
 
 
+def test_kv_bytes_roundtrip(client):
+    kv = FS3KV(client)
+    blob = os.urandom(4096)
+    kv.put("blob", blob)
+    assert kv.get("blob") == blob
+    kv.put("blob", b"short")                       # overwrite shrinks
+    assert kv.get("blob") == b"short"
+    kv.put("nested/path/key", b"deep")             # nested namespaces
+    assert kv.get("nested/path/key") == b"deep"
+
+
+def test_craq_write_then_read_from_tail(cluster):
+    chain = cluster.chains[0]
+    chain.write("/c/k", b"v1")
+    tail_idx = len(chain.targets) - 1
+    assert chain.read("/c/k", replica_hint=tail_idx) == b"v1"
+    assert chain.read("/c/k", replica_hint=0) == b"v1"
+
+
+def test_craq_dirty_read_resolves_at_tail(cluster):
+    """A replica holding a dirty version must serve the tail's committed
+    version, not its stale clean one (apportioned queries)."""
+    chain = cluster.chains[0]
+    chain.write("/c/k", b"old")
+    # Simulate a write caught mid-ack: the new version is applied on the
+    # whole chain but the clean-ack has not propagated back to the head.
+    alive = [t for t in chain.targets if t.alive]
+    with chain._lock:
+        chain._version += 1
+        ver = chain._version
+    for t in alive:
+        t.apply_write("/c/k", b"new", ver)
+    for t in reversed(alive[1:]):                  # ack stalls before head
+        t.mark_clean("/c/k", ver)
+    # head read: dirty local state -> resolve via tail.committed
+    assert chain.read("/c/k", replica_hint=0) == b"new"
+
+
+# ----------------------------- prefix store --------------------------------
+
+
+def _mk_cache(kv_dtype=None):
+    from repro.serving.paged_cache import PagedKVCache
+    return PagedKVCache(layers=2, n_blocks=8, block_size=4, kv_heads=2,
+                        head_dim=8, dtype="float32", kv_dtype=kv_dtype)
+
+
+def _fill(cache, ids, seed):
+    """Write deterministic junk into the pools at ``ids`` via the same
+    import path the cluster handoff uses, return the exported artifact."""
+    import jax.numpy as jnp
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    shape = (cache.k.shape[0], len(ids)) + cache.k.shape[2:]
+    data = {"k": rng.standard_normal(shape, np.float32),
+            "v": rng.standard_normal(shape, np.float32)}
+    if cache.quantized:
+        sshape = shape[:2] + (cache.block_size,)
+        data = {"k": np.asarray(jnp.asarray(data["k"], cache.k.dtype)),
+                "v": np.asarray(jnp.asarray(data["v"], cache.v.dtype)),
+                "k_scale": rng.random(sshape, np.float32) + 0.5,
+                "v_scale": rng.random(sshape, np.float32) + 0.5}
+    cache.import_blocks(ids, data)
+    return cache.export_blocks(ids)
+
+
+@pytest.mark.parametrize("kv_dtype", [None, "float8_e4m3"])
+def test_prefix_store_publish_fetch_bit_identical(client, kv_dtype):
+    """publish -> fetch through 3FS round-trips block contents (and for
+    quantized pools the per-token scale rows) bit-identically, across
+    two independent PagedKVCaches."""
+    import numpy as np
+
+    from repro.serving import FS3PrefixStore
+    store = FS3PrefixStore(FS3KV(client), tag="t0")
+
+    src = _mk_cache(kv_dtype)
+    ids = src.alloc(3)
+    art = {"length": 11, "first_token": 7,
+           "blocks": _fill(src, ids, seed=5),
+           "extras": {}}
+    store.publish("deadbeef", art)
+    assert store.publishes == 1
+
+    got = store.fetch("deadbeef")
+    assert got is not None and store.hits == 1
+    assert got["length"] == 11 and got["first_token"] == 7
+    for name, ref in art["blocks"].items():
+        a, b = np.asarray(ref), np.asarray(got["blocks"][name])
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a.view(np.uint8), b.view(np.uint8))
+
+    # import into a second cache and re-export: still bit-identical
+    dst = _mk_cache(kv_dtype)
+    ids2 = dst.alloc(3)
+    dst.import_blocks(ids2, got["blocks"])
+    back = dst.export_blocks(ids2)
+    for name, ref in art["blocks"].items():
+        np.testing.assert_array_equal(
+            np.asarray(ref).view(np.uint8),
+            np.asarray(back[name]).view(np.uint8))
+
+    assert store.fetch("cafebabe") is None and store.misses == 1
+
+
+def test_prefix_store_tag_namespaces(client):
+    """Different tags are disjoint key spaces — bumping the tag is the
+    cluster-wide invalidation story (DESIGN.md §11)."""
+    from repro.serving import FS3PrefixStore
+    kv = FS3KV(client)
+    a = FS3PrefixStore(kv, tag="gen0")
+    b = FS3PrefixStore(kv, tag="gen1")
+    src = _mk_cache()
+    ids = src.alloc(1)
+    a.publish("k", {"length": 4, "first_token": 1,
+                    "blocks": _fill(src, ids, seed=1), "extras": {}})
+    assert b.fetch("k") is None
+    assert a.fetch("k") is not None
+
+
 def test_stripe_spreads_chunks(cluster, client):
     """Chunks of one file land on multiple chains (load spreading)."""
     data = os.urandom(1024 * 8)

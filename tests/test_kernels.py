@@ -41,50 +41,6 @@ def test_flash_attention(case, dtype):
                                atol=tol, rtol=tol)
 
 
-# ------------------------------- flash decode ------------------------------
-
-DECODE_CASES = [
-    # b, h, kvh, d, n_blocks, bs, nbmax
-    (2, 4, 2, 32, 16, 16, 3),
-    (3, 8, 1, 64, 12, 64, 2),      # full-head-group GQA, big blocks
-    (2, 4, 4, 16, 10, 16, 4),      # MHA (group 1)
-    (1, 8, 2, 128, 24, 16, 8),
-]
-
-
-@pytest.mark.parametrize("case", DECODE_CASES)
-@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
-def test_flash_decode(case, dtype):
-    from repro.kernels.flash_decode import flash_decode, flash_decode_ref
-    b, h, kvh, d, nb, bs, nbmax = case
-    q = _rand((b, h, d), "float32")
-    kp = _rand((nb, bs, kvh, d), dtype)
-    vp = _rand((nb, bs, kvh, d), dtype)
-    # fragmented tables: physical ids deliberately permuted / reused
-    bt = jnp.asarray(RNG.integers(0, nb, (b, nbmax)), jnp.int32)
-    lens = jnp.asarray(RNG.integers(1, nbmax * bs + 1, (b,)), jnp.int32)
-    out = flash_decode(q, kp, vp, bt, lens, impl="interpret")
-    ref = flash_decode_ref(q, kp, vp, bt, lens)
-    np.testing.assert_allclose(np.asarray(out, np.float32),
-                               np.asarray(ref, np.float32),
-                               atol=1e-5, rtol=1e-5)
-
-
-def test_flash_decode_boundary_lengths():
-    """Exact block boundaries, length 1, and full-table occupancy."""
-    from repro.kernels.flash_decode import flash_decode, flash_decode_ref
-    b, h, kvh, d, nb, bs, nbmax = 4, 4, 2, 32, 9, 16, 3
-    q = _rand((b, h, d), "float32")
-    kp = _rand((nb, bs, kvh, d), "float32")
-    vp = _rand((nb, bs, kvh, d), "float32")
-    bt = jnp.asarray(RNG.integers(0, nb, (b, nbmax)), jnp.int32)
-    lens = jnp.asarray([1, bs, bs + 1, nbmax * bs], jnp.int32)
-    out = flash_decode(q, kp, vp, bt, lens, impl="interpret")
-    ref = flash_decode_ref(q, kp, vp, bt, lens)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               atol=1e-5, rtol=1e-5)
-
-
 # --------------------------------- rmsnorm --------------------------------
 
 

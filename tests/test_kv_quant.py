@@ -1,9 +1,7 @@
 """Quantized KV blocks (fp8/int8 pools + per-token scales): quantize_kv
 error bounds, engine-level determinism, the prefix-restore scale-carry
-regression (DESIGN.md §9), and the flash_decode deprecation guard."""
+regression (DESIGN.md §9), and the flash_decode deletion guard."""
 import dataclasses as dc
-import pathlib
-import re
 
 import jax
 import jax.numpy as jnp
@@ -127,20 +125,10 @@ def test_quantized_tokens_close_to_plain(setup):
 # ---------------------------- deprecation guard ----------------------------
 
 
-def test_flash_decode_not_called_in_src():
-    """``flash_decode`` survives only as a T=1 shim over the unified
-    paged chunk-attention op: nothing under src/repro outside its own
-    package may call it (mirrors the PR 5 prefill/decode_step guard)."""
-    root = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
-    pat = re.compile(r"\bflash_decode\b")
-    offenders = []
-    for path in root.rglob("*.py"):
-        if "kernels/flash_decode" in str(path.as_posix()):
-            continue
-        for lineno, line in enumerate(path.read_text().splitlines(), 1):
-            if pat.search(line):
-                offenders.append(f"{path.relative_to(root)}:{lineno}: "
-                                 f"{line.strip()}")
-    assert not offenders, \
-        "deprecated flash_decode referenced outside its package:\n" + \
-        "\n".join(offenders)
+def test_flash_decode_package_deleted():
+    """The ``flash_decode`` T=1 shim package is deleted outright (its
+    coverage lives in test_paged_chunk_attention's T=1 cases): the
+    module must not be importable."""
+    import importlib.util
+    assert importlib.util.find_spec("repro.kernels.flash_decode") is None, \
+        "deleted shim package repro.kernels.flash_decode still exists"

@@ -36,25 +36,28 @@ def test_train_step_smoke(arch):
 
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_prefill_decode_smoke(arch):
+    """Prompt as one fresh chunk, then a T=1 decode chunk — the chunk
+    API is the only serving surface (the prefill/decode_step shims are
+    gone)."""
     cfg, model = _model(arch)
     params = model.init(jax.random.PRNGKey(0))
     b, s = 2, 32
     batch = {k: jnp.asarray(v)
              for k, v in batch_for_model(cfg, "prefill", 0, b, s).items()}
-    cache, logits = jax.jit(model.prefill)(params, batch)
+    tokens, positions, embeds = model.prompt_inputs(params, batch)
+    start = model.prompt_length(batch)
+    fwd = jax.jit(model.forward, static_argnames=("fresh",))
+    state = jax.jit(model.init_seq_state,
+                    static_argnames=("max_len", "batch_size", "dtype"))(
+        params, max_len=start + 1, batch=batch, batch_size=b)
+    state, logits = fwd(params, state, tokens, positions, embeds=embeds,
+                        fresh=True)
     assert logits.shape == (b, cfg.vocab_size)
     assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: prefill NaN"
 
-    # grow attention caches by 1 slot so decode can write at index=s
-    def grow(x):
-        if hasattr(x, "ndim") and x.ndim == 5:
-            pad = [(0, 0)] * 5
-            pad[2] = (0, 1)
-            return jnp.pad(x, pad)
-        return x
-    cache = jax.tree_util.tree_map(grow, cache)
     toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    cache2, logits2 = jax.jit(model.decode_step)(params, cache, toks)
+    pos = jnp.full((b, 1), start, jnp.int32)
+    state, logits2 = fwd(params, state, toks[:, None], pos)
     assert logits2.shape == (b, cfg.vocab_size)
     assert bool(jnp.all(jnp.isfinite(logits2))), f"{arch}: decode NaN"
 

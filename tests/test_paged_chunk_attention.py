@@ -154,3 +154,58 @@ def test_engine_paged_path_traces_no_dense_scores():
         eng.step()                     # pure paged decode ticks
     assert attn.CHUNK_SCORE_TRACES == baseline, \
         "dense (T, S) score tensor traced on the paged decode path"
+
+
+# ---------------- folded-in flash_decode (T=1) coverage --------------------
+# The deleted ``kernels/flash_decode`` shim's tests, re-expressed as
+# single-token chunks through the unified op: a decode tick is exactly a
+# T=1 chunk whose position is length-1.
+
+T1_CASES = [
+    # h, kvh, d, n_blocks, bs, nbmax
+    (4, 2, 32, 16, 16, 3),
+    (8, 1, 64, 12, 64, 2),      # full-head-group GQA, big blocks
+    (4, 4, 16, 10, 16, 4),      # MHA (group 1)
+    (8, 2, 128, 24, 16, 8),
+]
+
+
+@pytest.mark.parametrize("case", T1_CASES)
+@pytest.mark.parametrize("kv_dtype", ["bfloat16", "float8_e4m3"])
+def test_single_token_decode_parity(case, kv_dtype):
+    from repro.kernels.paged_chunk_attention import (
+        paged_chunk_attention, paged_chunk_attention_ref)
+    h, kvh, d, nb, bs, nbmax = case
+    b = 3
+    q = _rand((b, 1, h, d))
+    kp, vp, ks, vs = _pools(nb, bs, kvh, d, kv_dtype)
+    # fragmented tables: physical ids deliberately permuted / reused
+    bt = jnp.asarray(RNG.integers(0, nb, (b, nbmax)), jnp.int32)
+    lens = RNG.integers(1, nbmax * bs + 1, b).astype(np.int32)
+    pos = jnp.asarray(lens[:, None] - 1)
+    out = paged_chunk_attention(q, kp, vp, bt, pos, k_scale=ks, v_scale=vs,
+                                impl="interpret")
+    ref = paged_chunk_attention_ref(q, kp, vp, bt, pos,
+                                    k_scale=ks, v_scale=vs)
+    tol = 1e-5 if kv_dtype == "bfloat16" else 1e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_single_token_boundary_lengths():
+    """T=1 at exact block boundaries, length 1, and full-table
+    occupancy (the deleted shim's boundary sweep)."""
+    from repro.kernels.paged_chunk_attention import (
+        paged_chunk_attention, paged_chunk_attention_ref)
+    b, h, kvh, d, nb, bs, nbmax = 4, 4, 2, 32, 9, 16, 3
+    q = _rand((b, 1, h, d))
+    kp, vp, _, _ = _pools(nb, bs, kvh, d, "bfloat16")
+    bt = jnp.asarray(RNG.integers(0, nb, (b, nbmax)), jnp.int32)
+    lens = np.asarray([1, bs, bs + 1, nbmax * bs], np.int32)
+    pos = jnp.asarray(lens[:, None] - 1)
+    out = paged_chunk_attention(q, kp, vp, bt, pos, impl="interpret")
+    ref = paged_chunk_attention_ref(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=1e-5, rtol=1e-5)

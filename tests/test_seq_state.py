@@ -5,13 +5,11 @@ families (chunked prefill at any chunk size reproduces monolithic
 prefill + decode greedy tokens), the engine's bucketed O(log) prefill
 compile count, the hybrid family on the paged path, sampled decode
 (reproducible under a fixed seed, invariant under eviction/requeue
-replay), kind="chunk" ShapeConfig specs, and the guard that nothing in
-src/ outside model_api.py calls the deprecated prefill/decode_step/
-paged_decode_step trio.
+replay), kind="chunk" ShapeConfig specs, and the guard that the
+deleted pre-chunk API (prefill/decode_step/paged_decode_step and the
+legacy cache specs) stays deleted.
 """
 import dataclasses as dc
-import pathlib
-import re
 
 import jax
 import jax.numpy as jnp
@@ -351,20 +349,16 @@ def test_chunk_shape_specs(arch):
 # ----------------------------- deprecation guard ----------------------------
 
 
-def test_deprecated_trio_not_called_in_src():
-    """The pre-chunk API (prefill / decode_step / paged_decode_step)
-    survives only as shims in model_api.py: nothing else under src/
-    may reference them."""
-    root = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
-    pat = re.compile(r"\.(prefill|decode_step|paged_decode_step)\b")
-    offenders = []
-    for path in root.rglob("*.py"):
-        if path.name == "model_api.py":
-            continue
-        for lineno, line in enumerate(path.read_text().splitlines(), 1):
-            if pat.search(line):
-                offenders.append(f"{path.relative_to(root)}:{lineno}: "
-                                 f"{line.strip()}")
-    assert not offenders, \
-        "deprecated model API called outside model_api.py:\n" + \
-        "\n".join(offenders)
+def test_deprecated_trio_deleted():
+    """The pre-chunk API (prefill / decode_step / paged_decode_step and
+    the legacy cache specs) is deleted outright: the symbols must not
+    exist on any model — the chunk calls are the only serving surface."""
+    from repro.configs.registry import smoke_config
+    from repro.models import build_model
+    for arch in ("codeqwen1.5-7b", "zamba2-1.2b", "whisper-base",
+                 "xlstm-125m"):
+        model = build_model(smoke_config(arch))
+        for sym in ("prefill", "decode_step", "paged_decode_step",
+                    "cache_specs", "cache_axes"):
+            assert not hasattr(model, sym), \
+                f"{arch}: deleted API {sym!r} still exists"
