@@ -46,10 +46,12 @@ def _cases():
             os.environ.get("REPRO_BENCH_SMOKE") != "1":
         return dict(batches=(8, 32), prompt=512, gen=64, block=64,
                     n_layers=4, repeat=20, ttft_prompt=512,
-                    ttft_chunks=(0, 64, 128, 256))
+                    ttft_chunks=(0, 64, 128, 256),
+                    spec_ks=(0, 2, 4, 8), spec_gen=64)
     return dict(batches=(2, 4), prompt=18, gen=6, block=16,
                 n_layers=2, repeat=2, ttft_prompt=30,
-                ttft_chunks=(0, 8, 16))
+                ttft_chunks=(0, 8, 16),
+                spec_ks=(0, 2, 4, 8), spec_gen=16)
 
 
 def _hbm_per_token(cfg, *, dense_cap, paged_blocks, block,
@@ -133,6 +135,52 @@ def _kv_dtype_sweep(model, params, cfg, c):
     base = rows[0]["hbm_bytes_per_token_paged"]
     for r in rows:
         r["hbm_vs_bf16"] = r["hbm_bytes_per_token_paged"] / base
+    return rows
+
+
+def _spec_sweep(model, params, cfg, c):
+    """Speculative decoding vs ``draft_k`` with the n-gram drafter on
+    repetitive prompts — the regime prompt-lookup drafting exists for
+    (code, templated text; here a repeated motif so the greedy stream
+    falls into a cycle the drafter predicts).  draft_k = 0 is the plain
+    engine baseline; every spec run's greedy token stream is asserted
+    bit-identical to it before its rates are recorded."""
+    from repro.serving import ServingEngine
+
+    b, block, gen = 2, c["block"], c["spec_gen"]
+    rng = np.random.default_rng(0)
+    motif = rng.integers(0, 13, size=8)
+    prompts = [np.concatenate([np.tile(motif, 4),
+                               [17 + i]]).astype(np.int32)
+               for i in range(b)]
+    max_k = max(c["spec_ks"])
+    n_blocks = b * (-(-(len(prompts[0]) + gen + max_k + 1) // block)) + 1
+    rows, base = [], None
+    for k in c["spec_ks"]:
+        kw = {} if k == 0 else dict(spec_mode="ngram", draft_k=k)
+        eng = ServingEngine(model, params, n_blocks=n_blocks,
+                            block_size=block, max_slots=b,
+                            share_prefixes=False, **kw)
+        rids = [eng.submit(p, gen) for p in prompts]
+        t0 = time.perf_counter()
+        outs = eng.run()
+        wall = time.perf_counter() - t0
+        toks = [outs[r] for r in rids]
+        if base is None:
+            base = toks
+        else:
+            for ref, got in zip(base, toks):
+                np.testing.assert_array_equal(ref, got)
+        st = eng.stats
+        rows.append({"draft_k": k, "gen": gen, "batch": b,
+                     "tokens_per_step": st["tokens_per_step"],
+                     "spec_accept_rate": st.get("spec_accept_rate"),
+                     "tpot_p50_s": st["tpot_p50"],
+                     "engine_steps": eng.step_count,
+                     "wall_s": wall})
+        emit(f"decode.spec.k{k}", st["tpot_p50"] * 1e6,
+             f"tokens_per_step={st['tokens_per_step']:.3f} "
+             f"accept={st.get('spec_accept_rate')}")
     return rows
 
 
@@ -220,16 +268,18 @@ def run():
 
     ttft = _ttft_sweep(model, params, c)
     kv_sweep = _kv_dtype_sweep(model, params, cfg, c)
+    spec = _spec_sweep(model, params, cfg, c)
     payload = {"backend": jax.default_backend(), "cases": records,
                "ttft_vs_prefill_chunk": ttft,
-               "kv_dtype_sweep": kv_sweep}
+               "kv_dtype_sweep": kv_sweep,
+               "spec_sweep": spec}
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)
     emit("decode.bench_written", 0,
          f"{OUT_PATH}({len(records)}cases+{len(ttft)}ttft"
-         f"+{len(kv_sweep)}kv)")
+         f"+{len(kv_sweep)}kv+{len(spec)}spec)")
     return {"ok": True, "cases": records, "ttft": ttft,
-            "kv_dtype_sweep": kv_sweep}
+            "kv_dtype_sweep": kv_sweep, "spec_sweep": spec}
 
 
 if __name__ == "__main__":

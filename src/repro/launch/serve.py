@@ -51,6 +51,16 @@ def main(argv=None):
                     choices=("bfloat16", "float8_e4m3", "int8"),
                     help="paged: quantized KV block dtype (default: the "
                          "model compute dtype, unquantized)")
+    ap.add_argument("--spec-mode", default="off",
+                    choices=("off", "ngram", "draft-model"),
+                    help="paged: speculative decoding — n-gram prompt-"
+                         "lookup drafting, or a smaller same-arch draft "
+                         "model (demo: the target arch at half the "
+                         "layers, randomly initialized); greedy streams "
+                         "stay bit-identical to --spec-mode off")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="spec: draft tokens proposed/verified per slot "
+                         "per step")
     ap.add_argument("--replicas", type=int, default=0,
                     help="paged: decode replicas in a disaggregated "
                          "ServingCluster (0 = single-engine paths)")
@@ -169,6 +179,24 @@ def _serve_dense(model, params, batch, args):
     return gen
 
 
+def _spec_kwargs(model, args):
+    """Engine kwargs for ``--spec-mode``.  The draft-model demo builds
+    the target arch at half the layers with its own random init — a
+    stand-in for a distilled small model sharing the tokenizer (real
+    deployments load trained draft params instead)."""
+    if args.spec_mode == "off":
+        return {}
+    kw = {"spec_mode": args.spec_mode, "draft_k": args.draft_k}
+    if args.spec_mode == "draft-model":
+        from repro.models import build_model
+        dcfg = dataclasses.replace(model.cfg,
+                                   n_layers=max(1, model.cfg.n_layers // 2))
+        dmodel = build_model(dcfg)
+        kw["draft_model"] = dmodel
+        kw["draft_params"] = dmodel.init(jax.random.PRNGKey(args.seed + 1))
+    return kw
+
+
 def _serve_paged(model, params, batch, args):
     """Continuous batching: requests enter a *running* decode batch at
     their arrival step instead of waiting for a fresh lockstep batch."""
@@ -184,7 +212,8 @@ def _serve_paged(model, params, batch, args):
                            prefill_chunk=args.prefill_chunk,
                            temperature=args.temperature,
                            top_k=args.top_k, seed=args.seed,
-                           kv_dtype=args.kv_dtype)
+                           kv_dtype=args.kv_dtype,
+                           **_spec_kwargs(model, args))
     rids = [engine.submit(row, args.gen, arrival=i * args.stagger)
             for i, row in enumerate(tokens)]
     t0 = time.time()
@@ -194,6 +223,8 @@ def _serve_paged(model, params, batch, args):
     produced = args.batch * args.gen
     mode = (f"sampled(T={args.temperature},k={args.top_k})"
             if args.temperature > 0 else "greedy")
+    if args.spec_mode != "off":
+        mode += f"+spec:{args.spec_mode}(draft_k={args.draft_k})"
     print(f"paged decode_impl ({mode}): {produced} tokens "
           f"({args.batch} seeded by prefill logits) over "
           f"{engine.step_count} engine steps in {t_total:.3f}s total "
@@ -230,7 +261,10 @@ def _serve_cluster(model, params, batch, args):
                                             block_size=args.block_size,
                                             max_slots=args.batch,
                                             prefill_chunk=args.prefill_chunk,
-                                            kv_dtype=args.kv_dtype))
+                                            kv_dtype=args.kv_dtype),
+                         # speculation rides the decode leg only —
+                         # prefill replicas never run decode ticks
+                         decode_engine_kwargs=_spec_kwargs(model, args))
     crids = [clu.submit(row, args.gen, arrival=i * args.stagger)
              for i, row in enumerate(tokens)]
     t0 = time.time()

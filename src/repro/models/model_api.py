@@ -101,6 +101,16 @@ class BaseLM:
         xl = jnp.take_along_axis(x, idx[:, None, None], axis=1)
         return self._logits(params, xl)[:, 0]
 
+    def _chunk_logits(self, params, x, positions, all_logits):
+        """Chunk output head: (b, V) at each slot's last valid position
+        by default, or — ``all_logits`` — the full (b, T, V) so callers
+        can read the model's prediction after *every* chunk row (the
+        speculative-verify consumer; padding rows produce garbage the
+        caller must mask by ``positions``)."""
+        if all_logits:
+            return self._logits(params, x)
+        return self._gather_logits(params, x, positions)
+
     def _ce(self, params, x, labels, mask=None):
         logits = self._logits(params, x)
         return cross_entropy(logits, labels, mask)
@@ -130,13 +140,17 @@ class BaseLM:
         return False
 
     def forward(self, params, state, tokens, positions, *, embeds=None,
-                fresh=False):
+                fresh=False, all_logits=False):
         """Advance ``state`` by one chunk of T >= 1 tokens per slot.
 
         tokens (b, T) int32 (ignored when ``embeds`` (b, T, d) is
         given); positions (b, T) int32 absolute per-slot positions,
         negative = padding.  Returns (state', logits (b, V)) with
-        logits gathered at each slot's last valid position.
+        logits gathered at each slot's last valid position — or, with
+        ``all_logits=True`` (static), the full per-row (b, T, V): the
+        multi-token-per-step emission mode speculative verify needs
+        (row t is the model's next-token prediction after the token at
+        ``positions[:, t]``; padding rows are garbage to mask).
 
         ``fresh=True`` is a static caller promise that ``state`` is
         factory-fresh and valid positions are lockstep arange rows —
@@ -159,20 +173,21 @@ class BaseLM:
         return batch["tokens"].shape[1]
 
     def _paged_chunk_driver(self, params, state, tokens, positions,
-                            step_token):
+                            step_token, all_logits=False):
         """Per-token scaffolding for paged forwards of families with a
         carried recurrence (hybrid mamba states advance one token at a
         time): embed token t, run ``step_token(x, pos) -> x`` (which
         advances the pools / recurrent carries in its closure), then
-        gather per-slot last-valid logits.  Pure-attention families run
-        the whole chunk through one fused op instead (DecoderLM).
+        gather per-slot last-valid logits (or project every row with
+        ``all_logits``).  Pure-attention families run the whole chunk
+        through one fused op instead (DecoderLM).
         Returns (logits, lengths)."""
         T = positions.shape[1]
         per_step = [step_token(self._embed(params, tokens[:, t])[:, None, :],
                                positions[:, t])
                     for t in range(T)]
         x = jnp.concatenate(per_step, axis=1) if T > 1 else per_step[0]
-        logits = self._gather_logits(params, x, positions)
+        logits = self._chunk_logits(params, x, positions, all_logits)
         lengths = jnp.max(positions, axis=1).astype(jnp.int32) + 1
         return logits, lengths
 
@@ -292,9 +307,10 @@ class DecoderLM(BaseLM):
                 "v": jnp.zeros((L, b, max_len, kv, hd), dtype)}
 
     def forward(self, params, state, tokens, positions, *, embeds=None,
-                fresh=False):
+                fresh=False, all_logits=False):
         if "block_tables" in state:
-            return self._forward_paged(params, state, tokens, positions)
+            return self._forward_paged(params, state, tokens, positions,
+                                       all_logits=all_logits)
         cfg = self.cfg
         x = embeds if embeds is not None else self._embed(params, tokens)
         x = shard_act(x, "batch", "seq", "embed")
@@ -329,10 +345,11 @@ class DecoderLM(BaseLM):
             x, (ck, cv) = jax.lax.scan(
                 body, x, (params["layers"], state["k"], state["v"]))
 
-        logits = self._gather_logits(params, x, positions)
+        logits = self._chunk_logits(params, x, positions, all_logits)
         return {**state, "k": ck, "v": cv}, logits
 
-    def _forward_paged(self, params, state, tokens, positions):
+    def _forward_paged(self, params, state, tokens, positions,
+                       all_logits=False):
         """Chunk forward against the block-paged pool: the whole (b, T)
         chunk runs as **one** fused ``paged_chunk_attn`` per layer
         (write-then-attend with per-slot position masking), so decode
@@ -383,7 +400,7 @@ class DecoderLM(BaseLM):
                 return x, ((kp, vp, ks, vs) if quant else (kp, vp))
             x, ys = jax.lax.scan(body, x, xs)
 
-        logits = self._gather_logits(params, x, positions)
+        logits = self._chunk_logits(params, x, positions, all_logits)
         lengths = jnp.max(positions, axis=1).astype(jnp.int32) + 1
         new = {**state, "k": ys[0], "v": ys[1], "lengths": lengths}
         if quant:
@@ -522,7 +539,7 @@ class WhisperLM(BaseLM):
                 "xk": xks.astype(dtype), "xv": xvs.astype(dtype)}
 
     def forward(self, params, state, tokens, positions, *, embeds=None,
-                fresh=False):
+                fresh=False, all_logits=False):
         cfg = self.cfg
         x = embeds if embeds is not None else self._dec_inputs(
             params, tokens, positions)
@@ -536,7 +553,7 @@ class WhisperLM(BaseLM):
         x, (ck, cv) = jax.lax.scan(
             body, x, (params["decoder"], state["k"], state["v"],
                       state["xk"], state["xv"]))
-        logits = self._gather_logits(params, x, positions)
+        logits = self._chunk_logits(params, x, positions, all_logits)
         return {**state, "k": ck, "v": cv}, logits
 
     def batch_specs(self, shape: ShapeConfig):
@@ -601,19 +618,21 @@ class ZambaLM(BaseLM):
         }
 
     def forward(self, params, state, tokens, positions, *, embeds=None,
-                fresh=False):
+                fresh=False, all_logits=False):
         if "block_tables" in state:
-            return self._forward_paged(params, state, tokens, positions)
+            return self._forward_paged(params, state, tokens, positions,
+                                       all_logits=all_logits)
         cfg = self.cfg
         x = embeds if embeds is not None else self._embed(params, tokens)
         x, mamba_states, ks, vs = zamba_mod.zamba_chunk(
             cfg, params, x, positions, state, fresh=fresh)
-        logits = self._gather_logits(params, x, positions)
+        logits = self._chunk_logits(params, x, positions, all_logits)
         return {**state, "mamba": mamba_states,
                 "k": jnp.stack(ks).astype(state["k"].dtype),
                 "v": jnp.stack(vs).astype(state["v"].dtype)}, logits
 
-    def _forward_paged(self, params, state, tokens, positions):
+    def _forward_paged(self, params, state, tokens, positions,
+                       all_logits=False):
         cfg = self.cfg
         tables = state["block_tables"]
         kp, vp, mamba = state["k"], state["v"], state["mamba"]
@@ -626,7 +645,8 @@ class ZambaLM(BaseLM):
             return x
 
         logits, lengths = self._paged_chunk_driver(params, state, tokens,
-                                                   positions, step_token)
+                                                   positions, step_token,
+                                                   all_logits=all_logits)
         new = {**state, "mamba": mamba, "k": kp, "v": vp,
                "lengths": lengths}
         if ks is not None:
@@ -693,7 +713,7 @@ class XLSTMLM(BaseLM):
                                                       self.compute_dtype)}
 
     def forward(self, params, state, tokens, positions, *, embeds=None,
-                fresh=False):
+                fresh=False, all_logits=False):
         cfg = self.cfg
         x = embeds if embeds is not None else self._embed(params, tokens)
         T = x.shape[1]
@@ -714,7 +734,7 @@ class XLSTMLM(BaseLM):
                     x, st = xlstm_mod.slstm_block_prefill(cfg, blk, x,
                                                           state=st)
             new_states.append(st)
-        logits = self._gather_logits(params, x, positions)
+        logits = self._chunk_logits(params, x, positions, all_logits)
         return {**state, "blocks": new_states}, logits
 
     def seq_state_specs(self, shape: ShapeConfig):

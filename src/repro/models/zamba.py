@@ -134,9 +134,22 @@ def zamba_paged_step(cfg, params, x, mamba, kp, vp, block_tables, pos,
     state.  x (b,1,d); kp/vp (I, n_blocks, bs, kv, hd); pos (b,) is each
     slot's write position.  Quantized pools carry per-token
     ``k_scale``/``v_scale`` (I, n_blocks, bs) beside them.  Returns
-    (x, mamba', kp', vp', k_scale', v_scale')."""
+    (x, mamba', kp', vp', k_scale', v_scale').
+
+    Negative positions mark padding **per slot**: that slot's KV write
+    is dropped (as everywhere on the chunk API) and — crucially for the
+    recurrent half — its mamba states carry through *unchanged*, so a
+    ragged chunk (slots with different valid widths, e.g. a speculative
+    verify window where each slot proposed a different number of draft
+    tokens) cannot absorb padding into the recurrence."""
     pos2 = pos[:, None]
     slots = attn.paged_slot_index(block_tables, pos2, kp.shape[2])
+    keep = pos >= 0                                      # (b,) per-slot
+
+    def _gate(new, old):
+        sel = keep.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(sel, new, old)
+
     new_mamba, inv, start = [], 0, 0
     for si, seg in enumerate(segments(cfg)):
         for li in range(start, start + seg):
@@ -144,6 +157,7 @@ def zamba_paged_step(cfg, params, x, mamba, kp, vp, block_tables, pos,
             xn = _pre_norm(x, lp["pre_scale"])
             out, st = mamba2.mamba2_decode(cfg, lp, xn, mamba[li])
             x = x + out
+            st = jax.tree_util.tree_map(_gate, st, mamba[li])
             new_mamba.append(st)
         start += seg
         if si < n_attn_invocations(cfg):

@@ -19,8 +19,11 @@ from repro.serving.cluster import ClusterRequest, ServingCluster
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.paged_cache import PagedKVCache
 from repro.serving.prefix_store import FS3PrefixStore
+from repro.serving.speculative import (SPEC_MODES, DraftModelDrafter,
+                                       NGramDrafter, make_drafter)
 from repro.serving.stats import SHARED_KEYS, check_schema, serving_stats
 
-__all__ = ["ClusterRequest", "FS3PrefixStore", "PagedKVCache", "Request",
-           "SHARED_KEYS", "ServingCluster", "ServingEngine", "check_schema",
-           "serving_stats"]
+__all__ = ["ClusterRequest", "DraftModelDrafter", "FS3PrefixStore",
+           "NGramDrafter", "PagedKVCache", "Request", "SHARED_KEYS",
+           "SPEC_MODES", "ServingCluster", "ServingEngine", "check_schema",
+           "make_drafter", "serving_stats"]

@@ -284,6 +284,18 @@ class ServingCluster:
             extra.update(store_publishes=self.prefix_store.publishes,
                          store_hits=sum(e._c_store_hits.value
                                         for e in self.prefill_engines))
+        # tokens/step + acceptance aggregate over the decode leg only
+        # (speculation rides decode_engine_kwargs; prefill replicas
+        # never decode, so they would dilute the mean with 1.0s)
+        spec_tps = self._merged(
+            "cluster.spec_tokens_per_step",
+            (e._h_spec_tps for e in self.decode_engines))
+        if any(e.drafter is not None for e in self.decode_engines):
+            spec_acc = self._merged(
+                "cluster.spec_accept_rate",
+                (e._h_spec_acc for e in self.decode_engines))
+            extra["spec_accept_rate"] = (spec_acc.mean
+                                         if spec_acc.count else 0.0)
         return serving_stats(
             requests_completed=self._c_completed.value,
             queue_depth=len(self._queue) + sum(
@@ -292,6 +304,7 @@ class ServingCluster:
             ttft=self._h_ttft,
             tpot=self._merged("cluster.tpot_s",
                               (e._h_tpot for e in self.decode_engines)),
+            tokens_per_step=spec_tps.mean if spec_tps.count else 1.0,
             replicas=replicas,
             steps=self.step_count,
             inflight=len(self._pf_inflight) + len(self._dc_inflight),

@@ -46,6 +46,8 @@ import numpy as np
 
 from repro.serve_lib import _prefix_key
 from repro.serving.paged_cache import PagedKVCache
+from repro.serving.speculative import (longest_accept, make_drafter,
+                                       spec_accept)
 from repro.serving.stats import serving_stats
 from repro.telemetry import Registry, now, span
 
@@ -125,7 +127,10 @@ class ServingEngine:
                  min_table_width: int = 2, prefill_chunk: int = 0,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  kv_dtype: str | None = None, prefill_role: bool = False,
-                 prefix_store=None):
+                 prefix_store=None, spec_mode: str = "off",
+                 draft_k: int = 4, draft_model=None, draft_params=None,
+                 draft_max_len: int = 512, ngram_max: int = 3,
+                 ngram_min: int = 1):
         cfg = model.cfg
         if cfg.family not in _PAGED_FAMILIES:
             raise ValueError(
@@ -167,6 +172,21 @@ class ServingEngine:
         self._extras = model.paged_state_extras(max_slots)
         self._extras_keys = tuple(self._extras)
 
+        # Speculative decode mode (DESIGN.md §12): a drafter proposes up
+        # to draft_k tokens per slot, the step verifies them as one
+        # (max_slots, draft_k + 1) chunk through the same paged kernel,
+        # and the engine keeps the longest accepted prefix plus one
+        # bonus token — 1..draft_k+1 tokens per cache sweep.  "off"
+        # keeps the plain one-token tick.
+        self.spec_mode = spec_mode
+        self.draft_k = int(draft_k)
+        self.drafter = make_drafter(
+            spec_mode, ngram_max=ngram_max, ngram_min=ngram_min,
+            draft_model=draft_model, draft_params=draft_params,
+            draft_max_len=draft_max_len, target_vocab=cfg.vocab_size)
+        if self.drafter is not None and self.draft_k < 1:
+            raise ValueError("draft_k must be >= 1 when speculating")
+
         # Per-engine metrics registry (standalone instance: concurrent
         # engines must not share counters).  Trace counters live here:
         # each jit cache miss re-traces the wrapped fn, so they count
@@ -182,6 +202,11 @@ class ServingEngine:
         self._h_tpot = self.metrics.histogram("engine.tpot_s")
         self._h_queue = self.metrics.histogram("engine.queue_wait_s")
         self._c_store_hits = self.metrics.counter("engine.store_hits")
+        # speculation: tokens emitted per slot per verify chunk (1..k+1)
+        # and per-chunk acceptance fraction (accepted drafts / proposed)
+        self._h_spec_tps = self.metrics.histogram(
+            "engine.spec_tokens_per_step")
+        self._h_spec_acc = self.metrics.histogram("engine.spec_accept_rate")
         if prefix_store is not None:
             # write-back: LRU-evicted prefix entries publish to the
             # cluster store while their blocks are still readable
@@ -202,6 +227,18 @@ class ServingEngine:
         # CPU rejects donation with a warning, so keep it off there.
         donate = (1,) if jax.default_backend() in ("tpu", "gpu") else ()
         self._step = jax.jit(_decode_fn, donate_argnums=donate)
+
+        def _verify_fn(params, state, tokens, positions):
+            self._c_decode_traces.inc()
+            return model.forward(params, state, tokens, positions,
+                                 all_logits=True)
+        # The verify chunk must NOT donate when recurrent extras exist:
+        # the hybrid rollback re-runs the chunk from the pre-verify
+        # extras snapshot, which donation would have invalidated.
+        self._verify = jax.jit(
+            _verify_fn,
+            donate_argnums=donate if not self._extras_keys else ())
+        self._accept = jax.jit(spec_accept)
 
         def _sample_fn(logits, base_keys, positions, temps, topks):
             # per-token key = fold_in(request base key, position), folded
@@ -290,7 +327,11 @@ class ServingEngine:
                       top_k=self.top_k if top_k is None else top_k,
                       seed=self.seed if seed is None else seed,
                       rid=self._next_rid, artifact=artifact,
-                      t_submit=artifact.get("t_submit") or now())
+                      # explicit None check: a legitimate t_submit of 0.0
+                      # (epoch-anchored clocks, synthetic traces) must not
+                      # silently reset the TTFT clock to "now"
+                      t_submit=(now() if artifact.get("t_submit") is None
+                                else artifact["t_submit"]))
         self._next_rid += 1
         self._queue.append(req)
         return req.rid
@@ -566,11 +607,17 @@ class ServingEngine:
 
     def _ensure_block(self, req: Request) -> bool:
         """Make sure the block table covers the next write position."""
-        if req.length // self.cache.block_size < len(req.blocks):
+        return self._ensure_blocks(req, req.length + 1)
+
+    def _ensure_blocks(self, req: Request, n_tokens: int) -> bool:
+        """Grow the block table to cover ``n_tokens`` cached positions
+        (a speculative verify writes ``1 + n_drafts`` at once)."""
+        need = self.cache.blocks_for(n_tokens) - len(req.blocks)
+        if need <= 0:
             return True
-        if self.cache.num_free < 1:
-            self.cache.reclaim(1)
-        got = self.cache.alloc(1)
+        if self.cache.num_free < need:
+            self.cache.reclaim(need)
+        got = self.cache.alloc(need)
         if got is None:
             return False
         req.blocks.extend(got)
@@ -619,6 +666,10 @@ class ServingEngine:
         for slot, req in enumerate(self._slots):
             if req is not None and req.rid == rid:
                 self._slots[slot] = None
+                if self.drafter is not None:
+                    # replay re-prefills from scratch; drop any per-rid
+                    # drafter state (draft-model SeqState) with it
+                    self.drafter.release(rid)
                 self.cache.free(req.blocks)
                 req.blocks, req.tokens, req.length = [], [], 0
                 req.slot, req.status = -1, "queued"
@@ -654,6 +705,8 @@ class ServingEngine:
                     f"blocks, pool has {self.cache.num_free} free")
             self.step_count += 1
             return 0
+        if self.drafter is not None:
+            return self._spec_step()
         # Walk slots (not a snapshot): _evict_for_space can clear any
         # slot mid-loop, and an evicted request must not be handed a
         # block it would never free.
@@ -739,6 +792,185 @@ class ServingEngine:
         self.step_count += 1
         return produced
 
+    # ---------------------------- speculation ------------------------------
+
+    def _spec_step(self) -> int:
+        """One speculative decode tick (DESIGN.md §12).
+
+        Draft: the drafter proposes up to ``draft_k`` tokens per slot
+        from that request's own token history.  Verify: one
+        (max_slots, draft_k + 1) chunk — row 0 is the slot's last
+        emitted token at its write position, rows 1..n its drafts, rows
+        beyond padded with position -1 (ragged proposals share one
+        compiled shape per table bucket; an empty proposal degrades to
+        a plain decode tick inside the same chunk).  Accept: longest
+        matching prefix per slot (greedy exact argmax match; sampled
+        via the rejection rule, position-keyed) plus one bonus token
+        from the stop row.  Rollback: block refs past the accepted
+        region are dropped (``cache.rollback``) and — hybrid — the
+        mamba extras are re-advanced from the pre-chunk snapshot
+        through only the accepted rows."""
+        k = self.draft_k
+        T = k + 1
+        cache = self.cache
+        # -- propose + reserve blocks (walk slots, not a snapshot:
+        #    _evict_for_space can clear any slot mid-loop) --
+        proposals: dict[int, list] = {}
+        for slot in range(self.max_slots):
+            req = self._slots[slot]
+            if req is None:
+                continue
+            cap = min(k, req.max_new_tokens - len(req.tokens) - 1)
+            prop: list = []
+            if cap > 0:
+                hist = np.concatenate(
+                    [req.prompt, np.asarray(req.tokens, np.int32)])
+                prop = [int(t) for t in
+                        self.drafter.propose(req.rid, hist, cap)][:cap]
+            # the verify chunk writes positions length..length+n; under
+            # pool pressure shrink the proposal to a plain decode tick
+            # before resorting to eviction
+            while self._slots[slot] is req and not self._ensure_blocks(
+                    req, req.length + 1 + len(prop)):
+                if prop:
+                    prop = []
+                    continue
+                if not self._evict_for_space(req):
+                    raise RuntimeError(
+                        f"KV pool exhausted: request {req.rid} needs a "
+                        f"block and nothing is evictable")
+            if self._slots[slot] is req:
+                proposals[req.rid] = prop
+        active = [r for r in self._slots if r is not None]
+        if not active:
+            self.step_count += 1
+            return 0
+
+        width = self._bucket(max(len(r.blocks) for r in active))
+        tables = np.zeros((self.max_slots, width), np.int32)
+        lengths = np.zeros(self.max_slots, np.int32)
+        toks = np.zeros((self.max_slots, T), np.int32)
+        pos = np.full((self.max_slots, T), -1, np.int32)
+        dnext = np.zeros((self.max_slots, T), np.int32)
+        temps = np.zeros(self.max_slots, np.float32)
+        topks = np.zeros(self.max_slots, np.int32)
+        keys = np.zeros((self.max_slots, 2), np.uint32)
+        for r in active:
+            prop = proposals.get(r.rid) or []
+            n = len(prop)
+            tables[r.slot, :len(r.blocks)] = r.blocks
+            lengths[r.slot] = r.length
+            toks[r.slot, 0] = r.tokens[-1]
+            toks[r.slot, 1:n + 1] = prop
+            pos[r.slot, :n + 1] = np.arange(r.length, r.length + n + 1)
+            dnext[r.slot, :n] = prop
+            temps[r.slot] = r.temperature
+            topks[r.slot] = r.top_k
+            if not r.greedy:
+                keys[r.slot] = self._base_key(r)
+
+        state = {"k": cache.k, "v": cache.v,
+                 "block_tables": jnp.asarray(tables),
+                 "lengths": jnp.asarray(lengths),
+                 "rng": jnp.asarray(keys), **self._extras}
+        if cache.quantized:
+            state["k_scale"] = cache.k_scale
+            state["v_scale"] = cache.v_scale
+        # pre-chunk extras snapshot: the recurrent-state rollback anchor
+        # (_verify never donates when extras exist, so this stays live)
+        snap_extras = dict(self._extras) if self._extras_keys else None
+        jtoks, jpos = jnp.asarray(toks), jnp.asarray(pos)
+        with span("engine.spec_tick", step=self.step_count,
+                  active=len(active), draft_k=k):
+            state, logits = self._verify(self.params, state, jtoks, jpos)
+        cache.k, cache.v = state["k"], state["v"]
+        if cache.quantized:
+            cache.k_scale = state["k_scale"]
+            cache.v_scale = state["v_scale"]
+        self._extras = {kk: state[kk] for kk in self._extras_keys}
+
+        # -- acceptance (host combines per slot) --
+        if all(r.greedy for r in active):
+            gn = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            acc = rej = plain = None
+        else:
+            gn, acc, rej, plain = (np.asarray(a) for a in self._accept(
+                logits, jnp.asarray(dnext), state["rng"], jpos,
+                jnp.asarray(temps), jnp.asarray(topks)))
+        emitted: dict[int, list] = {}
+        for r in active:
+            emitted[r.rid] = longest_accept(
+                r.greedy, proposals.get(r.rid) or [], gn[r.slot],
+                None if acc is None else acc[r.slot],
+                None if rej is None else rej[r.slot],
+                None if plain is None else plain[r.slot])
+
+        # -- hybrid correction pass: any partially-accepted slot has
+        #    advanced its mamba recurrence through rejected rows; re-run
+        #    the same chunk from the snapshot with those rows padded
+        #    out.  KV rewrites at accepted positions are bit-identical
+        #    (deterministic ops + per-row position masking), so only
+        #    the recurrent extras change.
+        if snap_extras is not None and any(
+                len(emitted[r.rid]) - 1 < len(proposals.get(r.rid) or [])
+                for r in active):
+            pos2 = np.full((self.max_slots, T), -1, np.int32)
+            for r in active:
+                mm = len(emitted[r.rid])       # accepted rows = m + 1
+                pos2[r.slot, :mm] = np.arange(r.length, r.length + mm)
+            state2 = {"k": cache.k, "v": cache.v,
+                      "block_tables": jnp.asarray(tables),
+                      "lengths": jnp.asarray(lengths),
+                      "rng": jnp.asarray(keys), **snap_extras}
+            if cache.quantized:
+                state2["k_scale"] = cache.k_scale
+                state2["v_scale"] = cache.v_scale
+            with span("engine.spec_fixup", step=self.step_count):
+                state2, _ = self._verify(self.params, state2, jtoks,
+                                         jnp.asarray(pos2))
+            cache.k, cache.v = state2["k"], state2["v"]
+            if cache.quantized:
+                cache.k_scale = state2["k_scale"]
+                cache.v_scale = state2["v_scale"]
+            self._extras = {kk: state2[kk] for kk in self._extras_keys}
+
+        # -- emit + rollback + retire --
+        produced = 0
+        tnow = now()
+        for r in active:
+            out = emitted[r.rid]
+            n = len(proposals.get(r.rid) or [])
+            m = len(out) - 1                   # accepted drafts
+            self._h_spec_tps.record(len(out))
+            if n:
+                self._h_spec_acc.record(m / n)
+            # rollback: keep block refs covering the accepted writes
+            # (positions 0..length+m); the rejected tail's refs drop
+            r.blocks = cache.rollback(r.blocks, r.length + m + 1)
+            r.length += m + 1
+            r.tokens.extend(out)
+            produced += len(out)
+            if r.t_last is not None:
+                # one verify sweep produced len(out) tokens: spread the
+                # wall-clock interval across them so TPOT keeps meaning
+                # "time per emitted token"
+                dt = (tnow - r.t_last) / len(out)
+                for _ in range(len(out)):
+                    self._h_tpot.record(dt)
+                r.tpot_sum += dt * len(out)
+                r.tpot_n += len(out)
+            r.t_last = tnow
+            if r.done:
+                self._slots[r.slot] = None
+                self.drafter.release(r.rid)
+                cache.free(r.blocks)
+                r.blocks = []
+                r.slot, r.status = -1, "done"
+                self._record_request(r)
+                self._done[r.rid] = r
+        self.step_count += 1
+        return produced
+
     # -------------------------------- drive --------------------------------
 
     def run(self, max_steps: int = 100_000) -> dict[int, np.ndarray]:
@@ -804,12 +1036,21 @@ class ServingEngine:
     def stats(self) -> dict:
         """Unified serving stats schema (``serving/stats.py``) plus
         engine-specific extras."""
+        speculating = self.drafter is not None
+        extra = {}
+        if speculating:
+            extra["spec_accept_rate"] = (self._h_spec_acc.mean
+                                         if self._h_spec_acc.count else 0.0)
         return serving_stats(
             requests_completed=self._c_completed.value,
             queue_depth=len(self._queue) + (1 if self._job is not None
                                             else 0),
             evictions=self.evictions,
             ttft=self._h_ttft, tpot=self._h_tpot,
+            tokens_per_step=(self._h_spec_tps.mean
+                            if speculating and self._h_spec_tps.count
+                            else 1.0),
+            **extra,
             steps=self.step_count,
             active_slots=sum(r is not None for r in self._slots),
             prefix_hit_rate=self.cache.hit_rate,

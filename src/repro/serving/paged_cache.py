@@ -186,6 +186,29 @@ class PagedKVCache:
             if self.refcount[i] == 0:
                 self._free.append(i)
 
+    def rollback(self, blocks: list, n_tokens: int) -> list:
+        """SeqState rollback primitive: truncate a sequence's block
+        table to cover exactly ``n_tokens`` cached positions, dropping
+        the tail references (speculative verify wrote K/V past the
+        accepted position; un-accepted blocks return to the pool here).
+
+        Cheap by construction: rollback is pure host bookkeeping —
+        device pools are never touched.  Stale entries left *inside*
+        the kept tail block are invisible (readers mask to the caller's
+        length) and are later overwritten by the identical
+        quantize-on-write path (``quantize_kv`` is a pure function of
+        the value, so a re-written fp8/int8 entry and its scale are
+        bit-identical — the re-quantize consistency tests pin this).
+        Shared/COW prefix blocks before the boundary keep their
+        refcounts: only references *past* ``blocks_for(n_tokens)`` are
+        dropped.  Returns the truncated table (a new list).
+        """
+        keep = self.blocks_for(n_tokens)
+        if keep >= len(blocks):
+            return list(blocks)
+        self.free(blocks[keep:])
+        return list(blocks[:keep])
+
     # ---------------------------- device writes ----------------------------
 
     def write_prompt(self, k, v, block_ids) -> None:

@@ -1,0 +1,272 @@
+"""Speculative decoding: drafters + the acceptance rule (DESIGN.md §12).
+
+Decode is HBM-bandwidth-bound (§VI-B4; arXiv:2505.09343): every decode
+tick streams the whole KV working set to produce *one* token per slot.
+Speculation amortizes that traffic — a cheap **drafter** proposes up to
+``k`` continuation tokens per slot, one chunked
+``forward(params, state, tokens, positions, all_logits=True)`` verifies
+all of them through the same paged chunk-attention op a decode tick
+uses (verifying k tokens *is* a (b, k+1) chunk with per-slot
+positions), and the engine keeps the longest accepted prefix plus one
+bonus token from the verify logits — between 1 and k+1 tokens per step
+for one cache sweep.
+
+Two drafters, one protocol::
+
+    propose(rid, history, k) -> list[int]   # <= k proposed tokens
+    release(rid)                            # forget per-request state
+
+``history`` is the request's full token stream so far (prompt +
+emitted); drafters must be **deterministic functions of it** — that is
+what makes eviction-replay reproduce the same accepted stream, and
+greedy spec-mode output bit-identical to non-speculative decode.
+
+* ``NGramDrafter`` — prompt-lookup decoding: match the longest recent
+  suffix n-gram against earlier history and propose the tokens that
+  followed it.  Free (no model), stateless, surprisingly strong on
+  repetitive/structured text (code, retrieval-augmented prompts, and
+  any greedy loop the target model itself falls into).
+* ``DraftModelDrafter`` — a small same-family draft model sharing the
+  target's tokenizer (vocab), holding a second (params, SeqState) pair
+  per request: catch up on newly-accepted tokens as one chunk, then
+  greedy-draft k tokens autoregressively.  Dense attention KV only —
+  its rollback is free (positional overwrite), so rejected draft
+  writes are simply overwritten by the next catch-up chunk.
+
+The acceptance rule (``spec_accept``) follows standard speculative
+sampling with a *deterministic* (point-mass) proposal q: greedy slots
+accept drafts matching the verify argmax exactly; sampled slots accept
+draft ``d`` with probability ``p(d)`` and on rejection resample from
+the renormalized leftover ``p`` with ``d`` zeroed — target-distribution
+exact, and keyed by the engine's existing ``fold_in(seed, rid,
+position)`` discipline so replay after eviction/requeue resamples
+identically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SPEC_MODES = ("off", "ngram", "draft-model")
+
+
+def _pow2_at_least(n: int, floor: int = 1) -> int:
+    w = max(floor, 1)
+    while w < n:
+        w *= 2
+    return w
+
+
+# ------------------------------- drafters ----------------------------------
+
+
+class NGramDrafter:
+    """Prompt-lookup drafting over the request's own token history.
+
+    Finds the most recent earlier occurrence of the longest suffix
+    n-gram (``max_n`` down to ``min_n``) and proposes the up-to-``k``
+    tokens that followed it.  Stateless and deterministic: identical
+    history always yields identical proposals (the replay invariant).
+    """
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        assert 1 <= min_n <= max_n
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, rid: int, history, k: int) -> list:
+        h = np.asarray(history, np.int64)
+        L = len(h)
+        for n in range(self.max_n, self.min_n - 1, -1):
+            if L <= n:
+                continue
+            pat = h[L - n:]
+            # candidate starts j with a continuation (j + n < L) that is
+            # not the suffix itself; sliding windows over h[:L-1]
+            win = np.lib.stride_tricks.sliding_window_view(h[:L - 1], n)
+            hits = np.flatnonzero(np.all(win == pat, axis=1))
+            if hits.size == 0:
+                continue
+            j = int(hits[-1])                       # most recent match
+            cont = h[j + n: j + n + k]
+            if cont.size:
+                return [int(t) for t in cont]
+        return []
+
+    def release(self, rid: int) -> None:
+        pass
+
+
+class DraftModelDrafter:
+    """A second (params, SeqState) pair drafting greedily.
+
+    The draft model must share the target's vocab ("tokenizer") and
+    carry *only* dense attention KV state (families ``dense``/``moe``):
+    positional overwrite makes its rollback free — after a partial
+    acceptance the next ``propose`` feeds the *true* accepted tokens at
+    the same positions the rejected drafts occupied, and per-position
+    masking hides anything beyond.  Recurrent draft families would need
+    their own snapshot machinery; the constructor rejects them.
+
+    Per-request state is a (SeqState, cached_len) pair; ``release``
+    drops it (eviction replay re-prefills the draft state from the
+    replayed history — deterministic, so proposals replay too).
+    """
+
+    def __init__(self, model, params, *, max_len: int = 512):
+        if model.cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"draft model must be a dense-attention family "
+                f"(dense/moe), got {model.cfg.family!r}: recurrent "
+                f"draft state cannot roll back by positional overwrite")
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._seqs: dict[int, tuple] = {}     # rid -> (SeqState, cached)
+        self._fwd = jax.jit(
+            lambda p, s, t, pos: model.forward(p, s, t, pos))
+
+    def propose(self, rid: int, history, k: int) -> list:
+        hist = np.asarray(history, np.int32)
+        L = len(hist)
+        if L + k > self.max_len:
+            return []                 # out of draft capacity: degrade
+        ent = self._seqs.get(rid)
+        if ent is None or ent[1] > L:           # fresh or stale (replay)
+            state = self.model.init_seq_state(
+                self.params, self.max_len, batch_size=1,
+                dtype=self.model.cfg.compute_dtype)
+            cached = 0
+        else:
+            state, cached = ent
+        # catch up on tokens accepted since the last round as one chunk,
+        # padded to a power of two (attention family: positions -1 are
+        # dropped writes) so catch-up compiles O(log max_len) variants
+        feed = hist[cached:]
+        width = _pow2_at_least(len(feed))
+        toks = np.zeros((1, width), np.int32)
+        toks[0, :len(feed)] = feed
+        pos = np.full((1, width), -1, np.int32)
+        pos[0, :len(feed)] = np.arange(cached, L, dtype=np.int32)
+        state, logits = self._fwd(self.params, state, jnp.asarray(toks),
+                                  jnp.asarray(pos))
+        drafts = [int(jnp.argmax(logits[0]))]
+        for i in range(k - 1):
+            state, logits = self._fwd(
+                self.params, state,
+                jnp.asarray([[drafts[-1]]], jnp.int32),
+                jnp.asarray([[L + i]], jnp.int32))
+            drafts.append(int(jnp.argmax(logits[0])))
+        # cache covers the true history only; draft writes past L are
+        # disposable (overwritten by the next catch-up chunk)
+        self._seqs[rid] = (state, L)
+        return drafts
+
+    def release(self, rid: int) -> None:
+        self._seqs.pop(rid, None)
+
+
+def make_drafter(mode: str, *, ngram_max: int = 3, ngram_min: int = 1,
+                 draft_model=None, draft_params=None,
+                 draft_max_len: int = 512, target_vocab: int | None = None):
+    """Drafter factory for ``ServingEngine(spec_mode=...)``."""
+    if mode not in SPEC_MODES:
+        raise ValueError(f"spec_mode must be one of {SPEC_MODES}, "
+                         f"got {mode!r}")
+    if mode == "off":
+        return None
+    if mode == "ngram":
+        return NGramDrafter(max_n=ngram_max, min_n=ngram_min)
+    if draft_model is None or draft_params is None:
+        raise ValueError("spec_mode='draft-model' needs draft_model "
+                         "and draft_params")
+    if (target_vocab is not None
+            and draft_model.cfg.vocab_size != target_vocab):
+        raise ValueError(
+            f"draft model vocab {draft_model.cfg.vocab_size} != target "
+            f"vocab {target_vocab}: speculation requires a shared "
+            f"tokenizer")
+    return DraftModelDrafter(draft_model, draft_params,
+                             max_len=draft_max_len)
+
+
+# ----------------------------- acceptance ----------------------------------
+
+
+def spec_accept(logits, draft_next, base_keys, positions, temps, topks):
+    """Per-row acceptance inputs for one verify chunk, on device.
+
+    logits (b, T, V) — ``all_logits`` verify output: row t predicts the
+    token after ``positions[:, t]``; draft_next (b, T) — the draft
+    token each row is checked against (row t holds d_{t+1}; rows past
+    a slot's proposals are ignored by the host); base_keys (b, 2)
+    uint32 per-request PRNG bases; positions (b, T) the chunk's write
+    positions (negative = padding); temps/topks (b,) sampling params.
+
+    Returns (greedy_next, accept, rej_tok, plain_tok), all (b, T):
+
+    * greedy_next — verify argmax (greedy slots accept by exact match;
+      also the greedy bonus token at the stop row);
+    * accept — sampled-slot accept flags: ``u < p(draft)`` with ``u``
+      drawn from a key folded at the draft token's absolute position
+      (the engine's replay-determinism discipline);
+    * rej_tok — rejection resample from the renormalized leftover
+      (``p`` with the draft token zeroed — exact for a point-mass
+      proposal);
+    * plain_tok — plain categorical (the sampled bonus after full
+      acceptance, where no draft was proposed).
+
+    The host combines these per slot: longest accepted prefix m, then
+    emit ``drafts[:m] + [bonus]``.
+    """
+    b, T, V = logits.shape
+    lf = logits.astype(jnp.float32)
+    greedy_next = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    # identical top-k/temperature shaping to the non-spec sampler
+    srt = jnp.sort(lf, axis=-1)                          # ascending
+    kidx = jnp.clip(V - topks, 0, V - 1)
+    thr = jnp.take_along_axis(
+        srt, jnp.broadcast_to(kidx[:, None, None], (b, T, 1)), axis=2)
+    mask = (topks > 0)[:, None, None] & (lf < thr)
+    scaled = jnp.where(mask, -jnp.inf, lf) \
+        / jnp.maximum(temps, 1e-6)[:, None, None]
+    logp = jax.nn.log_softmax(scaled, axis=-1)
+
+    # token at row t lands at absolute position positions[:, t] + 1;
+    # three sub-keys per row: accept draw / rejection resample / bonus
+    kpos = jnp.maximum(positions, 0) + 1
+    keys = jax.vmap(jax.vmap(jax.random.fold_in, (None, 0)))(
+        base_keys, kpos)                                  # (b, T, 2)
+    sub = jax.vmap(jax.vmap(lambda kk: jax.random.split(kk, 3)))(keys)
+    u = jax.vmap(jax.vmap(lambda kk: jax.random.uniform(kk[0])))(sub)
+    p_draft = jnp.exp(jnp.take_along_axis(
+        logp, draft_next[..., None], axis=2)[..., 0])
+    accept = u < p_draft
+    dmask = jax.nn.one_hot(draft_next, V, dtype=jnp.bool_)
+    adj = jnp.where(dmask, -jnp.inf, logp)
+    rej = jax.vmap(jax.vmap(
+        lambda kk, lg: jax.random.categorical(kk[1], lg)))(sub, adj)
+    plain = jax.vmap(jax.vmap(
+        lambda kk, lg: jax.random.categorical(kk[2], lg)))(sub, scaled)
+    return (greedy_next, accept, rej.astype(jnp.int32),
+            plain.astype(jnp.int32))
+
+
+def longest_accept(greedy: bool, drafts, greedy_next, accept, rej, plain):
+    """Host-side emission for one slot: longest accepted draft prefix
+    plus the bonus token — the multi-token-per-step output (1..k+1
+    tokens).  Greedy slots accept by exact argmax match (what makes the
+    stream bit-identical to non-speculative decode); sampled slots use
+    the rejection-rule flags and tokens from ``spec_accept``."""
+    n = len(drafts)
+    m = 0
+    if greedy:
+        while m < n and int(greedy_next[m]) == int(drafts[m]):
+            m += 1
+        bonus = int(greedy_next[m])
+    else:
+        while m < n and bool(accept[m]):
+            m += 1
+        bonus = int(plain[m]) if m == n else int(rej[m])
+    return list(drafts[:m]) + [bonus]

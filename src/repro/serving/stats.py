@@ -13,9 +13,13 @@ Shared keys (always present, same meaning everywhere):
   ttft_p50/p95/p99    float  seconds, submit -> first token exists
   tpot_p50/p95/p99    float  seconds, interval between consecutive
                              tokens of one request (per token)
+  tokens_per_step     float  mean tokens emitted per occupied slot per
+                             decode step — 1.0 on plain decode paths,
+                             > 1.0 when speculation accepts drafts
 
 Components may add extra keys (``prefix_hit_rate``, ``free_blocks``,
-``batches`` ...) but must not repurpose the shared ones.  Aggregates
+``spec_accept_rate`` — present only while speculating — ``batches``
+...) but must not repurpose the shared ones.  Aggregates
 nest their members' full stats dicts under ``replicas`` (name ->
 stats); leaf components omit the key entirely.
 """
@@ -27,6 +31,7 @@ SHARED_KEYS = (
     "requests_completed", "queue_depth", "evictions",
     "ttft_p50", "ttft_p95", "ttft_p99",
     "tpot_p50", "tpot_p95", "tpot_p99",
+    "tokens_per_step",
 )
 
 _QS = (50, 95, 99)
@@ -39,12 +44,15 @@ def latency_fields(prefix: str, hist: Histogram) -> dict:
 
 def serving_stats(*, requests_completed: int, queue_depth: int,
                   evictions: int, ttft: Histogram, tpot: Histogram,
+                  tokens_per_step: float = 1.0,
                   replicas: dict | None = None, **extra) -> dict:
     """Assemble one schema-conforming stats dict.
 
     ``ttft``/``tpot`` are the component's latency histograms (percentile
     keys are extracted here so every producer agrees on the quantiles);
-    ``extra`` carries component-specific keys; ``replicas`` nests member
+    ``tokens_per_step`` defaults to 1.0 — the plain one-token decode
+    tick — so only speculating producers need to pass it; ``extra``
+    carries component-specific keys; ``replicas`` nests member
     breakdowns for aggregates."""
     overlap = set(extra) & set(SHARED_KEYS)
     if overlap:
@@ -55,6 +63,7 @@ def serving_stats(*, requests_completed: int, queue_depth: int,
         "evictions": int(evictions),
         **latency_fields("ttft", ttft),
         **latency_fields("tpot", tpot),
+        "tokens_per_step": float(tokens_per_step),
         **extra,
     }
     if replicas is not None:
