@@ -41,7 +41,7 @@ def main() -> None:
             json_path = a.split("=", 1)[1]
             args.remove(a)
 
-    from benchmarks import (attn_bench, ddp_bench, decode_bench,
+    from benchmarks import (attn_bench, ckpt_bench, ddp_bench, decode_bench,
                             fig7_allreduce, fig8_weakscaling,
                             fig9_strongscaling, grad_bench, roofline,
                             serving_bench, table2_costperf, table3_network,
@@ -61,6 +61,7 @@ def main() -> None:
         "ddp": ddp_bench.run,
         "telemetry": telemetry_bench.run,
         "serving": serving_bench.run,
+        "ckpt": ckpt_bench.run,
     }
 
     names = args or list(suites)

@@ -1,3 +1,5 @@
-from repro.ckpt.manager import CheckpointManager
+from repro.ckpt.manager import (CheckpointManager, fs3_backend, np_dtype,
+                                pack_named, read_named)
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "fs3_backend", "np_dtype", "pack_named",
+           "read_named"]

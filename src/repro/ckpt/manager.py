@@ -1,4 +1,4 @@
-"""Checkpoint manager (paper §VII-A).
+"""Checkpoint manager (paper §VII-A, DESIGN.md §13).
 
 Faithful structure:
   * state is pulled to host (the async GPU->CPU transfer), then a
@@ -9,19 +9,34 @@ Faithful structure:
   * saves are atomic (index written last, then the `latest` pointer);
   * periodic policy: ``maybe_save(step)`` every ``period_s`` (default 300 s
     — the paper's 5 minutes), so a failure loses at most that window;
-  * backend: local directory (default) or a 3FS client.
+  * backend: local directory (default) or 3FS via :func:`fs3_backend`;
+    ``keep=`` GC holds on both.
+
+The chunk format (``step_N/chunk_K.bin`` + ``index.json``) is shared
+with the plan-stamped elastic checkpoints in ``repro.elastic`` through
+:func:`pack_named` / :func:`read_named`.
 """
 from __future__ import annotations
 
 import json
 import os
 import threading
-import time
 
 import jax
 import numpy as np
 
+from repro import telemetry
 from repro.telemetry import span
+
+
+def np_dtype(name: str) -> np.dtype:
+    """Resolve a stored dtype name, including the ml_dtypes extension
+    types (``bfloat16``, ``float8_e4m3fn``, ...) numpy cannot parse."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
 
 
 class _LocalBackend:
@@ -46,6 +61,16 @@ class _LocalBackend:
     def exists(self, name: str) -> bool:
         return os.path.exists(os.path.join(self.root, name))
 
+    def list_steps(self) -> list[int]:
+        steps = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_"):
+                try:
+                    steps.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return steps
+
     def delete_tree(self, prefix: str):
         import shutil
         p = os.path.join(self.root, prefix)
@@ -54,21 +79,54 @@ class _LocalBackend:
 
 
 class _FS3Backend:
-    def __init__(self, client, prefix="/ckpt"):
-        self.client = client
-        self.prefix = prefix
+    """Checkpoint backend on the simulated 3FS cluster.
+
+    Values go through :class:`repro.fs3.kv.FS3KV`, so every chunk lands
+    striped over CRAQ-replicated storage targets; GC walks the metadata
+    namespace (``delete_tree``) so ``keep=`` holds here exactly as it
+    does on the local backend.
+    """
+
+    def __init__(self, client, prefix: str = "ckpt"):
+        from repro.fs3.kv import FS3KV
+        if isinstance(client, FS3KV):
+            self.kv = client
+        else:
+            self.kv = FS3KV(client, namespace=prefix.strip("/"))
 
     def write(self, name: str, data: bytes):
-        self.client.write_file(f"{self.prefix}/{name}", data)
+        self.kv.put(name, data)
 
     def read(self, name: str) -> bytes:
-        return self.client.read_file(f"{self.prefix}/{name}")
+        raw = self.kv.get(name)
+        if raw is None:
+            raise FileNotFoundError(name)
+        return raw
 
     def exists(self, name: str) -> bool:
-        return self.client.exists(f"{self.prefix}/{name}")
+        return self.kv.exists(name)
+
+    def list_steps(self) -> list[int]:
+        steps = []
+        for name in self.kv.keys():
+            if name.startswith("step_"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return steps
 
     def delete_tree(self, prefix: str):
-        pass  # fs3 GC not modeled
+        self.kv.delete_tree(prefix)
+
+
+def fs3_backend(root: str, *, n_nodes: int = 3, replication: int = 2,
+                prefix: str = "ckpt") -> _FS3Backend:
+    """Spin up an in-process 3FS cluster rooted at ``root`` and return a
+    checkpoint backend writing through it (``--ckpt-fs3``)."""
+    from repro.fs3.client import FS3Client, FS3Cluster
+    cluster = FS3Cluster(root, n_nodes=n_nodes, replication=replication)
+    return _FS3Backend(FS3Client(cluster), prefix=prefix)
 
 
 def _path_str(path) -> str:
@@ -83,10 +141,66 @@ def _path_str(path) -> str:
     return "/".join(out)
 
 
+# ----------------------- chunk format (shared) -----------------------
+
+def pack_named(named, step: int, chunk_bytes: int):
+    """Pack ``(name, np.ndarray)`` pairs into fixed-size chunk files.
+
+    Returns ``(index, writes)``: the ``index.json`` dict mapping every
+    tensor to its (chunk, offset, size, shape, dtype) record, and the
+    list of ``(backend_name, bytes)`` chunk writes.  Shared between
+    :class:`CheckpointManager` and the elastic sharded saves.
+    """
+    index = {"step": step, "tensors": {}, "chunks": []}
+    buf, buf_used, chunk_id = [], 0, 0
+    writes = []
+
+    def flush():
+        nonlocal buf, buf_used, chunk_id
+        if not buf:
+            return
+        name = f"step_{step}/chunk_{chunk_id}.bin"
+        writes.append((name, b"".join(buf)))
+        index["chunks"].append(name)
+        buf, buf_used = [], 0
+        chunk_id += 1
+
+    for name, leaf in named:
+        arr = np.asarray(leaf)
+        raw = arr.tobytes()
+        if buf_used and buf_used + len(raw) > chunk_bytes:
+            flush()
+        index["tensors"][name] = {
+            "chunk": chunk_id, "offset": buf_used, "size": len(raw),
+            "shape": list(arr.shape), "dtype": str(arr.dtype),
+        }
+        buf.append(raw)
+        buf_used += len(raw)
+    flush()
+    return index, writes
+
+
+def read_named(backend, step: int):
+    """Read every tensor of a checkpoint step in its *stored* dtype.
+
+    Returns ``(tensors, index)`` with ``tensors`` mapping tensor name to
+    a host numpy array.  Chunk reads are batched (3FS batch read API).
+    """
+    index = json.loads(backend.read(f"step_{step}/index.json"))
+    chunks = {i: backend.read(name)
+              for i, name in enumerate(index["chunks"])}
+    tensors = {}
+    for name, rec in index["tensors"].items():
+        raw = chunks[rec["chunk"]][rec["offset"]:rec["offset"] + rec["size"]]
+        tensors[name] = np.frombuffer(
+            raw, dtype=np_dtype(rec["dtype"])).reshape(rec["shape"])
+    return tensors, index
+
+
 class CheckpointManager:
     def __init__(self, root_or_backend, *, keep: int = 3,
                  chunk_bytes: int = 16 * 1024 * 1024,
-                 period_s: float = 300.0):
+                 period_s: float = 300.0, clock=None):
         if isinstance(root_or_backend, str):
             self.backend = _LocalBackend(root_or_backend)
         else:
@@ -94,8 +208,9 @@ class CheckpointManager:
         self.keep = keep
         self.chunk_bytes = chunk_bytes
         self.period_s = period_s
+        self._clock = telemetry.now if clock is None else clock
         self._pending: list[threading.Thread] = []
-        self._last_save_t = 0.0
+        self._last_save_t: float | None = None
         self._lock = threading.Lock()
 
     # ------------------------- save -------------------------
@@ -114,9 +229,11 @@ class CheckpointManager:
             self._pending.append(t)
 
     def maybe_save(self, state, step: int, now: float | None = None) -> bool:
-        """Periodic policy (paper: every 5 minutes)."""
-        now = time.time() if now is None else now
-        if now - self._last_save_t >= self.period_s:
+        """Periodic policy (paper: every 5 minutes).  The first call
+        always saves; afterwards a save fires once per ``period_s`` on
+        the injected clock (default ``telemetry.now``)."""
+        now = self._clock() if now is None else now
+        if self._last_save_t is None or now - self._last_save_t >= self.period_s:
             self._last_save_t = now
             self.save(state, step, blocking=False)
             return True
@@ -128,52 +245,30 @@ class CheckpointManager:
 
     def _write_inner(self, host_state, step: int):
         leaves = jax.tree_util.tree_flatten_with_path(host_state)[0]
-        index = {"step": step, "tensors": {}, "chunks": []}
-        buf, buf_used, chunk_id = [], 0, 0
-        writes = []
+        named = [(_path_str(path), leaf) for path, leaf in leaves]
+        self.write_named(named, step)
 
-        def flush():
-            nonlocal buf, buf_used, chunk_id
-            if not buf:
-                return
-            name = f"step_{step}/chunk_{chunk_id}.bin"
-            writes.append((name, b"".join(buf)))
-            index["chunks"].append(name)
-            buf, buf_used = [], 0
-            chunk_id += 1
-
-        for path, leaf in leaves:
-            arr = np.asarray(leaf)
-            raw = arr.tobytes()
-            if buf_used and buf_used + len(raw) > self.chunk_bytes:
-                flush()
-            index["tensors"][_path_str(path)] = {
-                "chunk": chunk_id, "offset": buf_used, "size": len(raw),
-                "shape": list(arr.shape), "dtype": str(arr.dtype),
-            }
-            buf.append(raw)
-            buf_used += len(raw)
-        flush()
-
+    def write_named(self, named, step: int, extra_files=None):
+        """Write ``(name, array)`` pairs as one atomic checkpoint step:
+        chunks first, then index, optional sidecar files (e.g. the plan
+        manifest), and the ``latest`` pointer last."""
+        index, writes = pack_named(named, step, self.chunk_bytes)
         for name, data in writes:          # 3FS batch write
             self.backend.write(name, data)
         self.backend.write(f"step_{step}/index.json",
                            json.dumps(index).encode())
+        for name, data in (extra_files or {}).items():
+            self.backend.write(f"step_{step}/{name}", data)
         self.backend.write("latest.json",
                            json.dumps({"step": step}).encode())
         self._gc(step)
 
     def _gc(self, latest_step: int):
-        if not isinstance(self.backend, _LocalBackend) or self.keep <= 0:
+        if self.keep <= 0:
             return
-        steps = []
-        for d in os.listdir(self.backend.root):
-            if d.startswith("step_"):
-                try:
-                    steps.append(int(d.split("_")[1]))
-                except ValueError:
-                    pass
-        for s in sorted(steps)[: -self.keep]:
+        steps = [s for s in self.backend.list_steps() if s != latest_step]
+        steps.append(latest_step)      # never collect what we just wrote
+        for s in sorted(set(steps))[: -self.keep]:
             self.backend.delete_tree(f"step_{s}")
 
     def wait(self):
@@ -194,18 +289,13 @@ class CheckpointManager:
             return self._restore_inner(step, template)
 
     def _restore_inner(self, step: int, template):
-        index = json.loads(self.backend.read(f"step_{step}/index.json"))
-        chunks = {i: self.backend.read(name)      # 3FS batch read
-                  for i, name in enumerate(index["chunks"])}
+        tensors, _ = read_named(self.backend, step)
         leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
         out = []
         for path, leaf in leaves:
-            rec = index["tensors"][_path_str(path)]
-            raw = chunks[rec["chunk"]][rec["offset"]:
-                                       rec["offset"] + rec["size"]]
-            dtype = np.dtype(leaf.dtype) if not rec["dtype"].startswith(
-                "bfloat16") else leaf.dtype
-            arr = np.frombuffer(raw, dtype=dtype).reshape(rec["shape"])
+            # stored dtype is authoritative for the byte layout; the
+            # template dtype only says what the caller wants back
+            arr = tensors[_path_str(path)]
             out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
         return jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(template), out)

@@ -1,0 +1,103 @@
+"""Plan-stamped checkpoint manifests (DESIGN.md §13).
+
+A sharded checkpoint carries a ``plan.json`` sidecar next to its chunk
+``index.json`` recording *how* the saved tensors map onto the run that
+wrote them: the full :class:`~repro.parallel.plan.ParallelPlan`, the mesh
+axes/shape, which layout the optimizer state used (``zero1_flat`` flat
+shards vs a replicated ``tree``), and the flat-master offset table — the
+per-leaf ``[start, end)`` element ranges in tree-flatten order that
+``core.ddp.init_zero1_state`` concatenates.  That offset table is the
+index-remap substrate for cross-plan resharding: any source layout can be
+canonicalized to one flat fp32 vector and re-split for any target plan.
+
+The gradient bucket layout (``bucketing.plan_buckets`` slices and their
+``bucket_leaf_ranges``) is stamped alongside so a resumed run can verify
+its sync schedule matches the one the checkpoint trained under.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from repro.ckpt.manager import _path_str
+from repro.core import bucketing
+from repro.parallel.plan import ParallelPlan
+
+MANIFEST_NAME = "plan.json"
+FORMAT = 1
+
+
+def plan_to_dict(plan: ParallelPlan) -> dict:
+    """JSON-ready dict of every plan field (tuples become lists)."""
+    d = dataclasses.asdict(plan)
+    d["batch_axes"] = list(d["batch_axes"])
+    return d
+
+
+def plan_from_dict(d: dict) -> ParallelPlan:
+    d = dict(d)
+    d["batch_axes"] = tuple(d.get("batch_axes", ("pod", "data")))
+    return ParallelPlan(**d)
+
+
+def plans_equal(plan: ParallelPlan, stamped: dict) -> bool:
+    return plan_to_dict(plan) == dict(stamped)
+
+
+def mesh_to_dict(mesh) -> dict:
+    return {"axes": [str(a) for a in mesh.axis_names],
+            "shape": [int(mesh.shape[a]) for a in mesh.axis_names]}
+
+
+def master_layout(params_template, bucket_bytes=None) -> dict:
+    """Flat fp32 master layout for a params tree.
+
+    ``offsets`` maps each leaf path to its ``[start, end)`` element range
+    in the flat concat (forward tree-flatten order — exactly the order
+    ``init_zero1_state`` / ``bucketing.flatten_tree`` produce), derived
+    from the gradient :class:`~repro.core.bucketing.BucketPlan` so the
+    stamped bucket slices and the master offsets can never disagree.
+    """
+    f32 = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, np.float32), params_template)
+    kw = {} if bucket_bytes is None else {"bucket_bytes": bucket_bytes}
+    bplan = bucketing.plan_buckets(f32, **kw)
+    paths = [_path_str(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(params_template)[0]]
+    offsets = np.cumsum((0,) + bplan.sizes)
+    ranges = bucketing.bucket_leaf_ranges(bplan)
+    return {
+        "total": int(offsets[-1]),
+        "offsets": {path: [int(offsets[i]), int(offsets[i + 1])]
+                    for i, path in enumerate(paths)},
+        "shapes": {path: list(shape)
+                   for path, shape in zip(paths, bplan.shapes)},
+        "bucket_slices": [[int(s), int(e)] for s, e in bplan.bucket_slices],
+        "bucket_leaf_ranges": [[int(a), int(b)] for a, b in ranges],
+    }
+
+
+def build_manifest(step: int, plan: ParallelPlan, mesh, params_template,
+                   layout: str, flat: dict | None = None) -> dict:
+    man = {
+        "format": FORMAT,
+        "step": int(step),
+        "plan": plan_to_dict(plan),
+        "mesh": mesh_to_dict(mesh),
+        "layout": layout,
+        "master": master_layout(params_template, plan.bucket_bytes),
+    }
+    if flat is not None:
+        man["flat"] = flat
+    return man
+
+
+def dumps(man: dict) -> bytes:
+    return json.dumps(man, indent=1).encode()
+
+
+def loads(raw: bytes) -> dict:
+    return json.loads(raw.decode())

@@ -1,0 +1,165 @@
+"""Cross-plan checkpoint resharding (DESIGN.md §13).
+
+A checkpoint taken under one ``(ParallelPlan, mesh)`` is remapped onto
+another in three moves, all host-side index arithmetic:
+
+  1. **canonicalize** — reassemble whatever the source wrote back into
+     one flat fp32 master (and m/v) vector: ZeRO-1 shard slices are
+     placed at their stamped ``[start, end)`` offsets; replicated trees
+     are flattened leaf-by-leaf at the manifest's per-path offsets.
+  2. **remap** — copy each leaf's source range onto its range in the
+     *target* layout (``manifest.master_layout`` of the target params
+     template).  Same model ⇒ same paths; only the split changes.
+  3. **specialize** — cut the canonical flats for the target plan:
+     ZeRO-1 targets re-pad to the new ``n_parts`` and ``device_put`` with
+     the exact ``PartitionSpec`` ``core.ddp._zero1_layout`` would choose,
+     so a resharded state is indistinguishable from a fresh
+     ``init_zero1_state``; tree targets unflatten back to leaves.
+
+Same plan + same mesh round-trips bitwise (pure byte moves, no math),
+which is what makes same-plan kill/resume exactly reproducible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.ckpt.manager import _path_str, read_named
+from repro.core import ddp as ddp_lib
+from repro.elastic import manifest as manifest_lib
+
+FLAT_KEYS = ("master", "m", "v")
+
+
+def _assemble_flat(comp: dict, tensors: dict, total: int) -> np.ndarray:
+    """Reassemble a flat component from its saved shard slices."""
+    first = tensors[comp["shards"][0]["name"]]
+    out = np.zeros((comp["padded"],), dtype=first.dtype)
+    covered = 0
+    for rec in comp["shards"]:
+        out[rec["start"]:rec["end"]] = tensors[rec["name"]]
+        covered += rec["end"] - rec["start"]
+    if covered < total:
+        raise ValueError(
+            f"flat shards cover only {covered}/{total} elements — "
+            "checkpoint is missing shard slices")
+    return out[:total]
+
+
+def canonical_state(manager, step: int) -> dict:
+    """Read checkpoint ``step`` into canonical host form.
+
+    Returns ``{"params": {path: np.ndarray}, "flats": {master/m/v flat
+    unpadded vectors}, "step": int, "manifest": dict}`` — the midpoint
+    every (source plan → target plan) pair goes through.
+    """
+    man = manager.load_manifest(step)
+    tensors, _ = read_named(manager.backend, step)
+    total = man["master"]["total"]
+    offsets = man["master"]["offsets"]
+    params = {p: tensors[f"params/{p}"] for p in offsets}
+    flats = {}
+    if man["layout"] == "zero1_flat":
+        for key in FLAT_KEYS:
+            flats[key] = _assemble_flat(man["flat"][key], tensors, total)
+    else:
+        for key in FLAT_KEYS:
+            buf = None
+            for path, (s, e) in offsets.items():
+                leaf = tensors[f"{key}/{path}"]
+                if buf is None:
+                    buf = np.zeros((total,), dtype=leaf.dtype)
+                buf[s:e] = leaf.reshape(-1)
+            flats[key] = buf
+    return {"params": params, "flats": flats,
+            "step": int(np.asarray(tensors["step"])), "manifest": man}
+
+
+def _remap_flat(src_flat: np.ndarray, src_offsets: dict,
+                dst_offsets: dict) -> np.ndarray:
+    """The index remap: each leaf's source slice lands on its target
+    slice.  Identical offset tables reduce to one contiguous copy."""
+    total = max((e for _, e in dst_offsets.values()), default=0)
+    out = np.zeros((total,), dtype=src_flat.dtype)
+    for path, (t0, t1) in dst_offsets.items():
+        s0, s1 = src_offsets[path]
+        out[t0:t1] = src_flat[s0:s1]
+    return out
+
+
+def reshard(manager, plan_b, mesh_b, params_template, *, step: int):
+    """Remap checkpoint ``step`` onto ``(plan_b, mesh_b)``.
+
+    ``params_template`` is the target run's params tree (working dtype);
+    returns ``(state, step)`` ready for ``plan_b``'s executor.
+    """
+    can = canonical_state(manager, step)
+    src_off = {p: tuple(v)
+               for p, v in can["manifest"]["master"]["offsets"].items()}
+    dst_layout = manifest_lib.master_layout(params_template,
+                                            plan_b.bucket_bytes)
+    dst_off = {p: tuple(v) for p, v in dst_layout["offsets"].items()}
+    missing = sorted(set(dst_off) - set(src_off))
+    if missing:
+        raise KeyError(
+            f"target params leaves absent from checkpoint: {missing[:5]}"
+            f"{'...' if len(missing) > 5 else ''}")
+    flats = {k: _remap_flat(can["flats"][k], src_off, dst_off)
+             for k in FLAT_KEYS}
+
+    leaves, _ = jax.tree_util.tree_flatten_with_path(params_template)
+    treedef = jax.tree_util.tree_structure(params_template)
+    p_leaves = [np.asarray(can["params"][_path_str(path)])
+                for path, _ in leaves]
+    step_arr = jnp.asarray(can["step"], jnp.int32)
+
+    if plan_b.mode == "ddp" and plan_b.zero1:
+        axes, _, _, _ = ddp_lib._mesh_axes(plan_b, mesh_b)
+        total, padded, spec = ddp_lib._zero1_layout(
+            params_template, mesh_b, axes)
+        shard = NamedSharding(mesh_b, spec)
+        rep = NamedSharding(mesh_b, P())
+
+        def pad(v):
+            if padded > v.shape[0]:
+                v = np.concatenate(
+                    [v, np.zeros((padded - v.shape[0],), v.dtype)])
+            return v
+
+        params = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(a, dtype=l.dtype)
+                      for a, (_, l) in zip(p_leaves, leaves)])
+        state = {
+            "params": jax.device_put(params, rep),
+            "master": jax.device_put(
+                jnp.asarray(pad(flats["master"].astype(np.float32))),
+                shard),
+            "m": jax.device_put(jnp.asarray(pad(flats["m"])), shard),
+            "v": jax.device_put(jnp.asarray(pad(flats["v"])), shard),
+            "step": step_arr,
+        }
+    else:
+        # replicated tree state: the gspmd / pp executors shard
+        # activations and (optionally) leaves via sharding rules, not a
+        # flat optimizer vector
+        def tree_of(flat, dtype=None):
+            out = []
+            for path, leaf in leaves:
+                s, e = dst_off[_path_str(path)]
+                out.append(jnp.asarray(
+                    flat[s:e].reshape(leaf.shape),
+                    dtype=dtype if dtype is not None else flat.dtype))
+            return jax.tree_util.tree_unflatten(treedef, out)
+
+        state = {
+            "params": jax.tree_util.tree_unflatten(
+                treedef, [jnp.asarray(a, dtype=l.dtype)
+                          for a, (_, l) in zip(p_leaves, leaves)]),
+            "master": tree_of(flats["master"], jnp.float32),
+            "m": tree_of(flats["m"]),
+            "v": tree_of(flats["v"]),
+            "step": step_arr,
+        }
+    return state, step

@@ -1,0 +1,174 @@
+"""Sharded, plan-stamped checkpoints and the async save pipeline
+(paper §VII-A, DESIGN.md §13).
+
+:class:`ElasticCheckpointer` extends the chunked
+:class:`~repro.ckpt.manager.CheckpointManager` in two ways:
+
+  * **shard slices, not gathered tensors** — for a ZeRO-1 run the flat
+    fp32 master/moment vectors are written as each device's ``[start,
+    end)`` slice (deduplicated by offset), so no host ever materializes
+    the gathered optimizer state; replicated trees are written as whole
+    leaves exactly as before;
+  * **plan stamping** — every step carries a ``plan.json`` manifest
+    (see :mod:`repro.elastic.manifest`) so a later run can decide whether
+    it may resume bitwise (same plan) or must reshard (cross-plan, via
+    :func:`repro.elastic.reshard.reshard`).
+
+The pipeline stays off the critical path: the D2H snapshot runs under a
+``ckpt.d2h`` span on the caller's thread, the chunked write happens on a
+background thread under ``ckpt.write`` (``BENCH_ckpt.json`` holds the
+async-vs-blocking overhead numbers), and restores run under
+``ckpt.restore``.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager, _path_str
+from repro.elastic import manifest as manifest_lib
+from repro.telemetry import span
+
+FLAT_KEYS = ("master", "m", "v")
+
+
+class PlanMismatchError(RuntimeError):
+    """Checkpoint was stamped under a different ParallelPlan; resume with
+    an explicit cross-plan reshard (``restore_for`` / ``--resume-plan``)."""
+
+
+def _is_zero1_flat(plan, state) -> bool:
+    return (plan.mode == "ddp" and plan.zero1
+            and isinstance(state, dict) and "master" in state
+            and getattr(state["master"], "ndim", None) == 1)
+
+
+def _flat_shard_slices(arr):
+    """Unique ``(start, host_slice)`` pairs of a 1-D (possibly sharded)
+    array — one record per distinct shard offset, replicas deduplicated."""
+    recs = {}
+    for s in arr.addressable_shards:
+        idx = s.index[0] if s.index else slice(None)
+        start = 0 if idx.start is None else int(idx.start)
+        if start not in recs:
+            recs[start] = np.asarray(jax.device_get(s.data))
+    return [(start, recs[start]) for start in sorted(recs)]
+
+
+def snapshot_sharded(state, plan, mesh, step: int):
+    """D2H snapshot: ``(named host tensors, plan manifest)``.
+
+    ZeRO-1 flat components become ``flat/<key>/<start>`` shard slices;
+    everything else keeps its tree path (``params/...``, ``master/...``).
+    """
+    with span("ckpt.d2h", step=step):
+        if _is_zero1_flat(plan, state):
+            named = [("step", np.asarray(jax.device_get(state["step"])))]
+            for path, leaf in jax.tree_util.tree_flatten_with_path(
+                    state["params"])[0]:
+                named.append((f"params/{_path_str(path)}",
+                              np.asarray(jax.device_get(leaf))))
+            flat = {}
+            for key in FLAT_KEYS:
+                arr = state[key]
+                comp = {"padded": int(arr.shape[0]), "shards": []}
+                for start, data in _flat_shard_slices(arr):
+                    name = f"flat/{key}/{start:012d}"
+                    named.append((name, data))
+                    comp["shards"].append({
+                        "name": name, "start": int(start),
+                        "end": int(start + data.shape[0]),
+                    })
+                flat[key] = comp
+            man = manifest_lib.build_manifest(
+                step, plan, mesh, state["params"], "zero1_flat", flat=flat)
+        else:
+            named = [(_path_str(path), np.asarray(jax.device_get(leaf)))
+                     for path, leaf in
+                     jax.tree_util.tree_flatten_with_path(state)[0]]
+            man = manifest_lib.build_manifest(
+                step, plan, mesh, state["params"], "tree")
+    return named, man
+
+
+class ElasticCheckpointer(CheckpointManager):
+    """Plan-stamped sharded checkpoints with cross-plan restore.
+
+    ``restore_latest(template)`` resumes onto the checkpointer's current
+    ``(plan, mesh)`` and refuses a cross-plan checkpoint unless
+    ``allow_cross_plan=True``; ``restore_for(plan_b, mesh_b, ...)``
+    reshard-restores onto a different plan/device-count and re-stamps the
+    checkpointer so subsequent saves carry the new plan.
+    """
+
+    def __init__(self, root_or_backend, plan, mesh, *,
+                 allow_cross_plan: bool = False, **kw):
+        super().__init__(root_or_backend, **kw)
+        self.plan = plan
+        self.mesh = mesh
+        self.allow_cross_plan = allow_cross_plan
+
+    # ------------------------- save -------------------------
+
+    def save(self, state, step: int, blocking: bool = True):
+        named, man = snapshot_sharded(state, self.plan, self.mesh, step)
+        extra = {manifest_lib.MANIFEST_NAME: manifest_lib.dumps(man)}
+        if blocking:
+            self._write_named(named, step, extra)
+            return
+        t = threading.Thread(target=self._write_named,
+                             args=(named, step, extra), daemon=True)
+        t.start()
+        with self._lock:
+            self._pending.append(t)
+
+    def _write_named(self, named, step: int, extra):
+        with span("ckpt.write", step=step):
+            self.write_named(named, step, extra_files=extra)
+
+    # ------------------------- restore -------------------------
+
+    def load_manifest(self, step: int) -> dict:
+        return manifest_lib.loads(self.backend.read(
+            f"step_{step}/{manifest_lib.MANIFEST_NAME}"))
+
+    def restore(self, step: int, template):
+        from repro.elastic.reshard import reshard
+        with span("ckpt.restore", step=step):
+            man = self.load_manifest(step)
+            if not manifest_lib.plans_equal(self.plan, man["plan"]) \
+                    and not self.allow_cross_plan:
+                raise PlanMismatchError(
+                    f"step {step} was stamped under plan "
+                    f"{man['plan']['mode']!r} (zero1={man['plan']['zero1']})"
+                    f" != current {self.plan.mode!r}; pass --resume-plan / "
+                    "use restore_for() to reshard")
+            state, _ = reshard(self, self.plan, self.mesh,
+                               template["params"], step=step)
+        return state
+
+    def restore_for(self, plan_b, mesh_b, params_template, *,
+                    step: int | None = None):
+        """Cross-plan restore: remap the checkpoint onto ``(plan_b,
+        mesh_b)`` and adopt them for every save that follows."""
+        from repro.elastic.reshard import reshard
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                return None
+        with span("ckpt.restore", step=step):
+            state, step = reshard(self, plan_b, mesh_b, params_template,
+                                  step=step)
+        self.plan, self.mesh = plan_b, mesh_b
+        return state, step
+
+
+def save_sharded(state, plan, mesh, *, step: int, root_or_backend,
+                 blocking: bool = True, **kw) -> ElasticCheckpointer:
+    """One-shot plan-stamped sharded save; returns the checkpointer so
+    the caller can ``wait()`` / ``restore_for()`` against it."""
+    mgr = ElasticCheckpointer(root_or_backend, plan, mesh, **kw)
+    mgr.save(state, step, blocking=blocking)
+    return mgr

@@ -50,6 +50,12 @@ class FS3Cluster:
                     uniq.append(m)
                     seen.add(m.id)
             self.chains.append(CRAQChain(i, uniq))
+        # restart recovery: resume version counters past anything the
+        # targets recovered from disk, so fresh writes never collide with
+        # (and lose to) a committed pre-restart version of the same key
+        for chain in self.chains:
+            chain._version = max(chain._version,
+                                 max(t.max_version() for t in chain.targets))
         self.io = BatchIO(io_workers, max_senders)
         self._lock = threading.Lock()
 
@@ -141,3 +147,16 @@ class FS3Client:
 
     def exists(self, path) -> bool:
         return self.c.meta.exists(path)
+
+    def stat(self, path) -> dict:
+        """Inode metadata (``type``, ``size``, ...) for a path."""
+        return self.c.meta.lookup(path)[1]
+
+    def unlink(self, path):
+        """Drop the metadata entry for a path (file or empty dir).
+
+        Chunk garbage on the storage targets is reclaimed lazily by the
+        real system's scrubber; the simulation only models the metadata
+        side, which is what ``keep=`` checkpoint GC needs.
+        """
+        self.c.meta.unlink(path)

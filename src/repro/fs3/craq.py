@@ -31,6 +31,23 @@ class CRAQTarget:
         self.alive = True
         self._lock = threading.RLock()   # committed() may be re-entered by
         self._meta: dict[str, list[_Version]] = {}  # read()/revive() on self
+        self._recover()
+
+    def _recover(self):
+        """Rebuild the version table from the backing device: chunks on
+        disk are exactly the committed writes that survived a restart
+        (dirty versions never outlive the tail ack here), so a persisted
+        3FS root serves checkpoints across process restarts."""
+        for name in getattr(self.backing, "keys", list)():
+            key, _, ver = name.rpartition(".v")
+            if key and ver.isdigit():
+                self._meta.setdefault(key, []).append(
+                    _Version(int(ver), b"", True))
+
+    def max_version(self) -> int:
+        with self._lock:
+            return max((v.version for vs in self._meta.values()
+                        for v in vs), default=0)
 
     # -- chain protocol --
 

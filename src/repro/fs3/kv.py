@@ -37,6 +37,29 @@ class FS3KV:
         return default if raw is None else msgpack.unpackb(
             raw, strict_map_key=False)
 
+    def exists(self, key: str) -> bool:
+        return self.client.exists(self._vpath(key))
+
+    def delete(self, key: str):
+        with self._lock:
+            self.client.unlink(self._vpath(key))
+
+    def delete_tree(self, key_prefix: str):
+        """Remove a key and everything nested under it (keys may contain
+        ``/``, which the metadata service stores as directories)."""
+        root = self._vpath(key_prefix.strip("/"))
+        with self._lock:
+            if not self.client.exists(root):
+                return
+
+            def rm(path):
+                if self.client.stat(path)["type"] == "dir":
+                    for name in self.client.listdir(path):
+                        rm(f"{path}/{name}")
+                self.client.unlink(path)
+
+            rm(root)
+
     def keys(self):
         try:
             return self.client.listdir(f"/{self.ns}/v")

@@ -41,6 +41,10 @@ class StorageTarget:
         except FileNotFoundError:
             pass
 
+    def keys(self) -> list[str]:
+        """Stored chunk names (recovery scan after a target restart)."""
+        return [n for n in os.listdir(self.root) if not n.endswith(".tmp")]
+
 
 class RequestToSend:
     """Client-side incast control (paper §VI-B3): a storage service asks the

@@ -18,8 +18,9 @@ import dataclasses
 import json
 import subprocess
 import sys
-import time
 import traceback
+
+from repro.telemetry import now
 
 
 def input_specs(arch: str, shape_name: str):
@@ -67,7 +68,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     from repro.parallel.spec import make_parallel_config
     from repro.parallel.axes import Resolver
 
-    t0 = time.time()
+    t0 = now()
     cfg = get_arch(arch)
     shape = get_shape(shape_name)
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -120,9 +121,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     with mesh:
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = now() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = now() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     mem_info = {}

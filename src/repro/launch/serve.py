@@ -14,13 +14,12 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.telemetry import span
+from repro.telemetry import now, span
 
 
 def main(argv=None):
@@ -133,7 +132,7 @@ def _serve_dense(model, params, batch, args):
     fwd = jax.jit(model.forward, static_argnames=("fresh",))
     tokens, positions, embeds = model.prompt_inputs(params, batch)
     b, s = positions.shape
-    t0 = time.time()
+    t0 = now()
     with span("serve.dense_prefill", batch=b, prompt_len=s):
         state = jax.jit(model.init_seq_state,
                         static_argnames=("max_len", "batch_size", "dtype"))(
@@ -141,11 +140,11 @@ def _serve_dense(model, params, batch, args):
         state, logits = fwd(params, state, tokens, positions,
                             embeds=embeds, fresh=True)
         jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
+    t_prefill = now() - t0
 
     toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     out = [np.asarray(toks)]
-    t0 = time.time()
+    t0 = now()
     for i in range(args.gen - 1):
         pos = jnp.full((b, 1), s + i, jnp.int32)
         with span("serve.dense_decode", step=i):
@@ -153,7 +152,7 @@ def _serve_dense(model, params, batch, args):
             toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             out.append(np.asarray(toks))
     jax.block_until_ready(logits)
-    t_decode = time.time() - t0
+    t_decode = now() - t0
 
     if args.metrics:
         from repro.serving.stats import serving_stats
@@ -216,9 +215,9 @@ def _serve_paged(model, params, batch, args):
                            **_spec_kwargs(model, args))
     rids = [engine.submit(row, args.gen, arrival=i * args.stagger)
             for i, row in enumerate(tokens)]
-    t0 = time.time()
+    t0 = now()
     outs = engine.run()
-    t_total = time.time() - t0
+    t_total = now() - t0
 
     produced = args.batch * args.gen
     mode = (f"sampled(T={args.temperature},k={args.top_k})"
@@ -267,9 +266,9 @@ def _serve_cluster(model, params, batch, args):
                          decode_engine_kwargs=_spec_kwargs(model, args))
     crids = [clu.submit(row, args.gen, arrival=i * args.stagger)
              for i, row in enumerate(tokens)]
-    t0 = time.time()
+    t0 = now()
     outs = clu.run()
-    t_total = time.time() - t0
+    t_total = now() - t0
 
     stats = clu.stats()
     print(f"cluster ({args.prefill_replicas}P+{args.replicas}D, "

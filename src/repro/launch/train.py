@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 import warnings
 
 import jax
@@ -94,6 +93,17 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-async", action="store_true",
+                    help="write periodic checkpoints off the critical "
+                         "path (D2H snapshot + background chunk write)")
+    ap.add_argument("--ckpt-fs3", action="store_true",
+                    help="checkpoint into an in-process 3FS cluster "
+                         "(CRAQ-replicated) under --ckpt-dir instead of "
+                         "plain files")
+    ap.add_argument("--resume-plan", action="store_true",
+                    help="allow resuming a checkpoint stamped under a "
+                         "different ParallelPlan/device count (cross-plan "
+                         "reshard of the flat masters)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--parallel", choices=("gspmd", "ddp", "pp"),
@@ -161,17 +171,28 @@ def main(argv=None):
     manager = None
     start_step = 0
     if args.ckpt_dir:
-        from repro.ckpt import CheckpointManager
-        manager = CheckpointManager(args.ckpt_dir)
+        from repro.elastic import ElasticCheckpointer, PlanMismatchError
+        backend = args.ckpt_dir
+        if args.ckpt_fs3:
+            from repro.ckpt import fs3_backend
+            backend = fs3_backend(args.ckpt_dir)
+        manager = ElasticCheckpointer(backend, plan, mesh)
         if args.resume:
-            restored = manager.restore_latest(state)
+            if args.resume_plan:
+                restored = manager.restore_for(plan, mesh, params)
+            else:
+                try:
+                    restored = manager.restore_latest(state)
+                except PlanMismatchError as e:
+                    raise SystemExit(f"{e}") from e
             if restored is not None:
                 state, start_step = restored
                 print(f"resumed from step {start_step}")
 
+    from repro.telemetry import now
     loader = make_synthetic_loader(cfg, args.batch, args.seq,
                                    seed=args.seed, start_step=start_step)
-    t0 = time.time()
+    t0 = now()
     losses = []
     try:
         for step, batch in loader:
@@ -182,12 +203,12 @@ def main(argv=None):
             loss = float(metrics["loss"])
             losses.append(loss)
             if step % args.log_every == 0 or step == args.steps - 1:
-                dt = time.time() - t0
+                dt = now() - t0
                 print(f"step {step:5d} loss {loss:.4f} "
                       f"({dt / max(step - start_step + 1, 1):.3f}s/step)")
             if manager and args.ckpt_every and step and \
                     step % args.ckpt_every == 0:
-                manager.save(state, step, blocking=False)
+                manager.save(state, step, blocking=not args.ckpt_async)
     finally:
         loader.stop()
         if manager:

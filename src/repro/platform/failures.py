@@ -65,7 +65,8 @@ class FailureKind(str, enum.Enum):
 # platform emits through ``repro.telemetry.EventLog`` uses one of these
 # ``kind``s, so the Table-6 failure accounting, the FT runner's report,
 # and any persisted JSONL log classify identically.
-EVENT_KINDS = ("failure", "restore", "rescale", "straggler", "ckpt")
+EVENT_KINDS = ("failure", "validator", "restore", "rescale", "straggler",
+               "ckpt")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -9,8 +9,8 @@ median; a step slower than ``straggler_factor`` x median raises a
 straggler event — the platform's answer is to swap the node (simulated by
 the caller's injector) and keep going, never to silently stall the gang.
 
-Every discrete platform event — ``failure`` / ``restore`` / ``rescale``
-/ ``straggler`` / ``ckpt`` — goes through **one**
+Every discrete platform event — ``failure`` / ``validator`` /
+``restore`` / ``rescale`` / ``straggler`` / ``ckpt`` — goes through **one**
 ``repro.telemetry.EventLog`` (the runner's ``event_log``): the
 ``RunReport.events`` list, the ``on_event`` callback, and the
 persistable JSONL stream all see the *same* record, so the Table-6
@@ -46,15 +46,25 @@ class FTRunner:
     make_step(world_size) -> step_fn(state, batch) -> (state, metrics)
       (re-built on elastic rescale; world_size is a logical node count)
     fetch_batch(step) -> batch
-    ckpt_manager: repro.ckpt.CheckpointManager
+    ckpt_manager: repro.ckpt.CheckpointManager (or an
+      elastic.ElasticCheckpointer for plan-stamped saves)
     injector: optional FailureInjector (check(step) raises)
+    validator: optional platform.Validator — after a failure the node is
+      health-checked (``node_healthy()``); a node failing its checks is
+      excluded from the restored gang even when the failure class itself
+      was non-fatal, and a ``validator`` event records the verdict.
+    restore_fn: optional ``(state_template, new_world) -> (state, step)``
+      hook — the elastic harness uses it to reshard the checkpoint onto
+      the shrunken mesh (cross-plan restore); default is the manager's
+      same-plan ``restore_latest``.
     event_log: optional telemetry.EventLog (one is created per runner
       otherwise); ``runner.event_log.write(path)`` persists the stream.
     """
 
     def __init__(self, make_step, fetch_batch, ckpt_manager, state,
                  *, world_size: int, min_world: int = 1,
-                 ckpt_every: int = 10, injector=None,
+                 ckpt_every: int = 10, injector=None, validator=None,
+                 restore_fn: Optional[Callable] = None,
                  straggler_factor: float = 4.0,
                  on_event: Optional[Callable] = None,
                  event_log: Optional[EventLog] = None):
@@ -66,6 +76,8 @@ class FTRunner:
         self.min_world = min_world
         self.ckpt_every = ckpt_every
         self.injector = injector
+        self.validator = validator
+        self.restore_fn = restore_fn
         self.straggler_factor = straggler_factor
         self.on_event = on_event or (lambda *a: None)
         self.event_log = event_log or EventLog()
@@ -124,10 +136,26 @@ class FTRunner:
                 report.failures += 1
                 self._log(report, "failure", step=step, cls=e.cls,
                           action=e.action, fatal=e.fatal)
-                # disaster recovery: restore last checkpoint
+                # validator gate (paper §III-D checks): the failed node
+                # re-runs its health checks; failing run_all() excludes
+                # it from the restored gang even for a non-fatal class
+                healthy = True
+                if self.validator is not None:
+                    with span("validator.node_healthy", step=step):
+                        healthy = bool(self.validator.node_healthy())
+                    self._log(report, "validator", step=step,
+                              healthy=healthy, excluded=not healthy)
+                new_world = self.world
+                if (e.fatal or not healthy) and self.world > self.min_world:
+                    new_world = self.world - 1
+                # disaster recovery: restore the last checkpoint, aimed
+                # at the (possibly shrunken) mesh the run continues on
                 self.ckpt.wait()
                 with span("ckpt.restore", step=step):
-                    restored = self.ckpt.restore_latest(self.state)
+                    if self.restore_fn is not None:
+                        restored = self.restore_fn(self.state, new_world)
+                    else:
+                        restored = self.ckpt.restore_latest(self.state)
                 if restored is None:
                     raise
                 self.state, ckstep = restored
@@ -136,9 +164,9 @@ class FTRunner:
                 self._log(report, "restore", step=step, ckpt_step=ckstep,
                           lost_steps=max(step - ckstep, 0))
                 step = ckstep
-                # elastic: fatal failure removes a node; shrink the gang
-                if e.fatal and self.world > self.min_world:
-                    self.world -= 1
+                # elastic: the dead/unhealthy node leaves; shrink the gang
+                if new_world != self.world:
+                    self.world = new_world
                     report.rescales += 1
                     self._log(report, "rescale", new_world=self.world)
                 step_fn = self.make_step(self.world)

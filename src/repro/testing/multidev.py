@@ -416,8 +416,203 @@ def check_elastic_remesh():
     return err
 
 
+def _event_digest(report, event_log, tmpdir):
+    """Persist the runner's JSONL stream and check exactly-once: the file
+    holds the same records as ``report.events`` (one emit point), every
+    record is unique (kinds counted, timestamps excluded from the key)."""
+    import os as _os
+    path = _os.path.join(tmpdir, "events.jsonl")
+    event_log.write(path)
+    with open(path) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    kinds = {}
+    seen = set()
+    unique = True
+    for rec in lines:
+        kinds[rec["kind"]] = kinds.get(rec["kind"], 0) + 1
+        key = json.dumps({k: v for k, v in rec.items() if k != "t"},
+                         sort_keys=True)
+        unique = unique and key not in seen
+        seen.add(key)
+    return {
+        "n_jsonl": len(lines),
+        "n_report": len(report.events),
+        "jsonl_matches_report": lines == [dict(r) for r in report.events],
+        "unique": unique,
+        "kinds": kinds,
+    }
+
+
+def check_elastic_kill_resume():
+    """Same-plan kill/resume (ddp+zero1, Table-V-sampled non-fatal class)
+    through FTRunner + ElasticCheckpointer is *bitwise*: replayed and
+    post-restore losses and the final flat masters match the unbroken
+    run exactly, and every platform event lands exactly once on the
+    runner's event_log JSONL stream."""
+    import tempfile
+    from repro.data.synthetic import batch_for_model
+    from repro.elastic import ElasticCheckpointer
+    from repro.optim import AdamW
+    from repro.parallel.plan import ParallelPlan, init_state, make_train_step
+    from repro.platform.failures import FailureInjector, FailureModel
+    from repro.platform.runner import FTRunner
+
+    cfg, model, _, params = _small_dense()
+    opt = AdamW(lr=1e-3, param_dtype="float32")
+    mesh = _mesh()
+    plan = ParallelPlan(mode="ddp", zero1=True, overlap=False)
+
+    def fetch(i):
+        return {k: jnp.asarray(v) for k, v in
+                batch_for_model(cfg, "train", i, 16, 32).items()}
+
+    base = make_train_step(plan, model, opt, mesh, params_template=params)
+
+    def make_runner(tmp, injector, sink):
+        def wrapped(state, batch):
+            state, mets = base(state, batch)
+            sink.append(float(mets["loss"]))
+            return state, mets
+
+        mgr = ElasticCheckpointer(tmp, plan, mesh)
+        return FTRunner(lambda world: wrapped, fetch, mgr,
+                        init_state(plan, opt, params, mesh),
+                        world_size=2, ckpt_every=5, injector=injector)
+
+    # failure class drawn from the paper's Table-V taxonomy; a non-fatal
+    # class means the gang survives intact (no rescale) on this leg
+    cls = next(e.cls for e in FailureModel(seed=0).sample(1250, 48.0)
+               if not e.fatal)
+
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        ref_losses = []
+        runner_ref = make_runner(d1, None, ref_losses)
+        runner_ref.run(10)
+        ref_final = jax.device_get(runner_ref.state)
+
+        losses = []
+        runner = make_runner(d2, FailureInjector({7: cls}), losses)
+        report = runner.run(10)
+        final = jax.device_get(runner.state)
+        digest = _event_digest(report, runner.event_log, d2)
+
+    # kill at 7 -> restore ckpt 5 -> replay 5..6 -> continue 7..9
+    want = ref_losses[:7] + ref_losses[5:]
+    state_diff = max(
+        float(np.max(np.abs(np.asarray(a, np.float32)
+                            - np.asarray(b, np.float32))))
+        for a, b in zip(jax.tree_util.tree_leaves(final),
+                        jax.tree_util.tree_leaves(ref_final)))
+    return {
+        "cls": cls,
+        "losses_bitwise": losses == want,
+        "n_losses": [len(losses), len(want)],
+        "state_diff": state_diff,
+        "failures": report.failures,
+        "restores": report.restores,
+        "rescales": report.rescales,
+        "lost_steps": report.lost_steps,
+        "digest": digest,
+    }
+
+
+def check_elastic_cross_plan():
+    """A checkpoint taken under pp (2 stages, 8 devices) resumes under
+    ddp+zero1 on 4 devices mid-run: FTRunner hits a Table-V fatal class,
+    the restore_fn reshards the plan-stamped checkpoint onto the shrunken
+    mesh, and the post-restore loss trajectory tracks the unbroken pp
+    run."""
+    import tempfile
+    from repro.data.synthetic import batch_for_model
+    from repro.elastic import ElasticCheckpointer
+    from repro.optim import AdamW
+    from repro.parallel.plan import ParallelPlan, init_state, make_train_step
+    from repro.platform.failures import FailureInjector, FailureModel
+    from repro.platform.runner import FTRunner
+
+    cfg, model, _, params = _small_dense()
+    opt = AdamW(lr=1e-3, param_dtype="float32")
+    mesh_pp = jax.make_mesh((2, 2, 2), ("pipe", "pod", "data"))
+    mesh_dp = jax.sharding.Mesh(
+        np.array(jax.devices()[:4]).reshape(1, 4), ("pod", "data"))
+    plan_pp = ParallelPlan(mode="pp", pp_microbatches=2)
+    plan_dp = ParallelPlan(mode="ddp", zero1=True, overlap=False)
+
+    def fetch(i):
+        return {k: jnp.asarray(v) for k, v in
+                batch_for_model(cfg, "train", i, 16, 32).items()}
+
+    def plan_for(world):
+        return (plan_pp, mesh_pp) if world >= 2 else (plan_dp, mesh_dp)
+
+    # unbroken pp reference trajectory
+    step_pp = make_train_step(plan_pp, model, opt, mesh_pp,
+                              params_template=params)
+    st = init_state(plan_pp, opt, params, mesh_pp)
+    ref_losses = []
+    for i in range(10):
+        st, mets = step_pp(st, fetch(i))
+        ref_losses.append(float(mets["loss"]))
+
+    cls = next(e.cls for e in FailureModel(seed=1).sample(1250, 48.0)
+               if e.fatal)
+    losses = []
+    step_cache = {}
+
+    def make_step(world):
+        if world not in step_cache:
+            p, m = plan_for(world)
+            base = make_train_step(p, model, opt, m, params_template=params)
+
+            def wrapped(state, batch, _base=base):
+                state, mets = _base(state, batch)
+                losses.append(float(mets["loss"]))
+                return state, mets
+
+            step_cache[world] = wrapped
+        return step_cache[world]
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = ElasticCheckpointer(d, plan_pp, mesh_pp)
+
+        def restore_fn(_template, new_world):
+            p, m = plan_for(new_world)
+            return mgr.restore_for(p, m, params)
+
+        runner = FTRunner(make_step, fetch, mgr,
+                          init_state(plan_pp, opt, params, mesh_pp),
+                          world_size=2, min_world=1, ckpt_every=5,
+                          injector=FailureInjector({7: cls}),
+                          restore_fn=restore_fn)
+        report = runner.run(10)
+        digest = _event_digest(report, runner.event_log, d)
+
+    # kill at 7 -> reshard ckpt 5 onto ddp/4dev -> 5 post-restore steps
+    cont = losses[7:]
+    post_err = max(abs(a - b) for a, b in zip(cont, ref_losses[5:]))
+    return {
+        "cls": cls,
+        "post_err": post_err,
+        "cont_losses": cont,
+        "ref_losses": ref_losses,
+        "world": runner.world,
+        "failures": report.failures,
+        "restores": report.restores,
+        "rescales": report.rescales,
+        "lost_steps": report.lost_steps,
+        "digest": digest,
+    }
+
+
 def main():
     out = {}
+    if sys.argv[1:] == ["elastic"]:
+        out["elastic_same_plan"] = check_elastic_kill_resume()
+        out["elastic_cross_plan"] = check_elastic_cross_plan()
+        out["n_devices"] = len(jax.devices())
+        print("MULTIDEV_JSON:" + json.dumps(out))
+        return
     out["hfreduce_err"], out["flat_err"] = check_hfreduce()
     out["tree_err"], out["ring_err"] = check_tree_allreduce()
     out["bf16_psum_relerr"], out["int8_psum_relerr"] = check_compressed_psum()

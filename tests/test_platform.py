@@ -162,3 +162,50 @@ def test_ft_runner_resume_determinism(tmp_path):
                     jax.tree_util.tree_leaves(s2["master"])):
         assert bool(jnp.allclose(a, b, atol=1e-6)), \
             "resume after failure diverged from unbroken run"
+
+
+def test_validator_gates_restore_and_rescale(tmp_path):
+    """A node failing its validation suite after a *non-fatal* failure is
+    still excluded from the restored gang: the runner emits a
+    ``validator`` event (healthy=False, excluded=True) and rescales."""
+    from repro.ckpt import CheckpointManager
+    from repro.platform.failures import EVENT_KINDS
+    from repro.platform.validator import CheckResult
+
+    assert "validator" in EVENT_KINDS
+    make_step, fetch, state = _tiny_setup()
+
+    sick = Validator(gemm_n=64, mem_mb=2, storage_mb=1)
+    # silent-corruption detector trips: run_all() reports the failure
+    sick.check_gemm = lambda: CheckResult("gemm_oracle", False, 0.0, "")
+    assert not sick.node_healthy()
+
+    inj = FailureInjector({6: "sw_xid31"})      # non-fatal class
+    r = FTRunner(make_step, fetch, CheckpointManager(str(tmp_path)), state,
+                 world_size=4, min_world=2, ckpt_every=5, injector=inj,
+                 validator=sick).run(10)
+    assert r.failures == 1 and r.restores == 1
+    assert r.rescales == 1, "unhealthy node must leave the rescale mesh"
+    vevents = [e for e in r.events if e["kind"] == "validator"]
+    assert len(vevents) == 1
+    assert vevents[0]["healthy"] is False and vevents[0]["excluded"] is True
+    # ordering: the health verdict lands before restore/rescale
+    kinds = [e["kind"] for e in r.events]
+    assert kinds.index("validator") < kinds.index("restore") < \
+        kinds.index("rescale")
+
+
+def test_validator_healthy_node_keeps_world(tmp_path):
+    """Same non-fatal class with a passing validator: restore only, no
+    rescale, and the validator event records healthy=True."""
+    from repro.ckpt import CheckpointManager
+
+    make_step, fetch, state = _tiny_setup()
+    ok = Validator(gemm_n=64, mem_mb=2, storage_mb=1)
+    inj = FailureInjector({6: "sw_xid31"})
+    r = FTRunner(make_step, fetch, CheckpointManager(str(tmp_path)), state,
+                 world_size=4, min_world=2, ckpt_every=5, injector=inj,
+                 validator=ok).run(10)
+    assert r.failures == 1 and r.restores == 1 and r.rescales == 0
+    vevents = [e for e in r.events if e["kind"] == "validator"]
+    assert len(vevents) == 1 and vevents[0]["healthy"] is True

@@ -167,16 +167,18 @@ def test_event_log_jsonl_roundtrip(tmp_path):
 
 
 def test_one_clock_guard_mirrors_ci():
-    """`telemetry.now` is the only sanctioned time.perf_counter in src/
-    (spans must be nullable by set_enabled(False))."""
+    """`telemetry.now` is the only sanctioned clock in src/: no raw
+    time.perf_counter (spans must be nullable by set_enabled(False)) and
+    no raw time.time (checkpoint policies must take an injectable clock)."""
     src = pathlib.Path(__file__).resolve().parent.parent / "src"
     offenders = [
         str(p.relative_to(src))
         for p in src.rglob("*.py")
         if "repro/telemetry" not in p.as_posix()
-        and "time.perf_counter" in p.read_text()
+        and ("time.perf_counter" in p.read_text()
+             or "time.time" in p.read_text())
     ]
-    assert not offenders, f"raw perf_counter outside telemetry: {offenders}"
+    assert not offenders, f"raw clock calls outside telemetry: {offenders}"
 
 
 # ------------------------------ engine metrics ------------------------------
